@@ -1,0 +1,71 @@
+"""Roofline table: aggregate dryrun_results JSONs into the §Roofline report.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single_pod_16x16]
+Emits a markdown table + CSV rows (name,us_per_call,derived).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "dryrun_results")
+
+
+def load(mesh_tag: str):
+    d = os.path.join(RESULTS, mesh_tag)
+    rows = []
+    if not os.path.isdir(d):
+        return rows
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                rows.append(json.load(fh))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return rows
+
+
+def markdown(rows):
+    hdr = (
+        "| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | bottleneck | "
+        "useful | roofline-frac | HBM GiB/chip |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    out = [hdr]
+    for r in rows:
+        mem = r["memory"].get("total_bytes", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | {r['bottleneck']} | {r['useful_flops_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} | {mem:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def emit_csv(rows, mesh_tag):
+    for r in rows:
+        t_total = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        print(
+            f"roofline/{mesh_tag}/{r['arch']}/{r['shape']},{t_total*1e6:.0f},"
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.4f};"
+            f"useful={r['useful_flops_ratio']:.3f}"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod_16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.markdown:
+        print(markdown(rows))
+    else:
+        emit_csv(rows, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

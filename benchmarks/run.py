@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  * fig4_1   — normalized error + runtime vs (k, q), VGG-sized layer
+  * fig4_2   — same on the ViT layer + exact-SVD speedups
+  * table4_1 — end-to-end compression grid (time/ratio/top-1/top-5)
+  * powersgd — RSI gradient-compression comm-volume table
+  * roofline — dry-run roofline terms per (arch x shape), if dry-run ran
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fig4_1, fig4_2, serving, table4_1, roofline_table
+
+    print("name,us_per_call,derived")
+    fig4_1.emit_csv(fig4_1.run())
+    sys.stdout.flush()
+    fig4_2.emit_csv(fig4_2.run())
+    sys.stdout.flush()
+    table4_1.emit_csv(table4_1.run())
+    sys.stdout.flush()
+    serving.emit_csv(serving.run())
+    sys.stdout.flush()
+
+    # PowerSGD comm-volume (beyond-paper distributed-optimization feature)
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.gradient_compression import PowerSGDConfig, comm_bytes
+
+    grads = {
+        "w1": jnp.zeros((2048, 8192)),
+        "w2": jnp.zeros((8192, 2048)),
+        "norm": jnp.zeros((2048,)),
+    }
+    for rank in (2, 4, 8):
+        dense, comp = comm_bytes(grads, PowerSGDConfig(rank=rank))
+        print(f"powersgd/rank={rank},0,dense_MB={dense/1e6:.1f};compressed_MB={comp/1e6:.2f};reduction={dense/comp:.0f}x")
+
+    for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+        rows = roofline_table.load(mesh)
+        roofline_table.emit_csv(rows, mesh)
+
+
+if __name__ == "__main__":
+    main()

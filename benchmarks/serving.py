@@ -1,0 +1,76 @@
+"""Serving-throughput benchmark: dense vs RSI-compressed decode (measured).
+
+CPU wall-clock, reduced llama config — the RELATIVE throughput and agreement
+numbers support EXPERIMENTS.md §Perf C2 (weight compression as a serving
+lever).  Emits name,us_per_call,derived CSV rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import CompressionPolicy, compress_tree, spectralize_params
+from repro.data.synthetic import SyntheticLM
+from repro.models.model import build_model
+
+
+def run(alphas=(0.4, 0.2), q: int = 4, batch: int = 8, prompt: int = 16, gen: int = 16):
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = spectralize_params(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(9))
+    data = SyntheticLM(cfg, batch=batch, seq=prompt, kind="serve")
+    bt = {k: jnp.asarray(v) for k, v in data.at_step(0).items()}
+    max_len = prompt + gen
+
+    def bench(p):
+        logits, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len))(p, bt)
+        step = jax.jit(model.decode_step)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        # warm
+        l2, c2 = step(p, cache, tok, jnp.int32(prompt))
+        jax.block_until_ready(l2)
+        t0 = time.perf_counter()
+        toks = [tok]
+        c = cache
+        for i in range(gen):
+            logits, c = step(p, c, toks[-1], jnp.int32(prompt + i))
+            toks.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+        jax.block_until_ready(toks[-1])
+        dt = time.perf_counter() - t0
+        return np.concatenate([np.asarray(t) for t in toks[1:]], axis=1), dt
+
+    ref, t_dense = bench(params)
+    rows = [dict(name="dense", alpha=0.0, seconds=t_dense, tok_s=batch * gen / t_dense, agree=1.0, ratio=1.0)]
+    for alpha in alphas:
+        cp, _, rep = compress_tree(
+            params, CompressionPolicy(alpha=alpha, q=q, min_dim=32), jax.random.PRNGKey(1)
+        )
+        out, dt = bench(cp)
+        rows.append(
+            dict(
+                name=f"alpha={alpha}",
+                alpha=alpha,
+                seconds=dt,
+                tok_s=batch * gen / dt,
+                agree=float((out == ref).mean()),
+                ratio=rep.ratio,
+            )
+        )
+    return rows
+
+
+def emit_csv(rows):
+    for r in rows:
+        print(
+            f"serving/{r['name']},{r['seconds']*1e6:.0f},"
+            f"tok_s={r['tok_s']:.1f};agree={r['agree']:.3f};ratio={r['ratio']:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    emit_csv(run())

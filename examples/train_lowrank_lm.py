@@ -1,0 +1,44 @@
+"""Training driver: train an LM for a few hundred steps, with optional
+RSI-compressed (low-rank) parameterization from step 0.
+
+    PYTHONPATH=src python examples/train_lowrank_lm.py               # reduced (CPU-sized)
+    PYTHONPATH=src python examples/train_lowrank_lm.py --steps 300   # longer run
+    PYTHONPATH=src python examples/train_lowrank_lm.py --full        # real mamba2-130m cfg
+
+Demonstrates that the factored {a, b} parameter trees produced by
+core/compress are TRAINABLE (gradients flow through apply_linear), i.e. the
+framework supports low-rank-native training, not just post-hoc compression —
+with checkpoint/restart via the production launcher machinery.
+"""
+
+import argparse
+
+from repro.launch import train as train_cli
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--alpha", type=float, default=0.5)
+    args = ap.parse_args()
+
+    argv = [
+        "--arch", "mamba2-130m",
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "64",
+        "--ckpt-dir", "/tmp/rsi_lowrank_train",
+        "--save-every", "50",
+        "--compress-alpha", str(args.alpha),
+        "--compress-q", "4",
+    ]
+    if not args.full:
+        argv.append("--reduced")
+    state, metrics = train_cli.main(argv)
+    assert float(metrics["loss"]) < 7.0, "training diverged"
+    print("low-rank training OK")
+
+
+if __name__ == "__main__":
+    main()

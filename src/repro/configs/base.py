@@ -1,0 +1,134 @@
+"""Architecture + shape-cell configuration system.
+
+Every assigned architecture is an :class:`ArchConfig`; every assigned input
+shape is a :class:`ShapeCell`.  Configs are plain frozen dataclasses so they
+are hashable (usable as static jit args) and trivially serializable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPE_CELLS", "pad_to_multiple"]
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Superset config covering dense / moe / vlm / hybrid / audio / ssm families."""
+
+    name: str
+    family: str  # dense | moe | vlm | hybrid | audio | ssm
+    n_layers: int
+    d_model: int
+    vocab: int
+
+    # --- attention ---
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None  # SWA (h2o-danube)
+    rope_theta: float = 500_000.0
+
+    # --- FFN ---
+    d_ff: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0  # deepseek-v2: layer 0 is a dense FFN
+    dense_d_ff: int = 0  # FFN width of those dense layers
+    capacity_factor: float = 1.25
+
+    # --- MLA (deepseek-v2) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- VLM (llama-3.2-vision) ---
+    cross_attn_every: int = 0  # every Nth layer is cross-attention
+    n_image_tokens: int = 0  # stub frontend: precomputed patch embeddings
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256  # SSD chunk length
+    attn_every: int = 0  # zamba2: shared attention block every N mamba blocks
+
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0
+    n_audio_frames: int = 1500  # stub conv frontend output length
+
+    # --- numerics / training ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    remat: str = "block"  # none | block (checkpoint each scanned block)
+    remat_group: int = 1  # layers per activation checkpoint (memory knob)
+    use_pallas: bool = False  # XLA path for dry-run; Pallas on real TPU
+    optimizer: str = "adamw"  # adamw | adafactor (memory-bound giants) | sgdm
+    accum_steps: int = 1  # microbatch gradient accumulation (train memory knob)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def d_inner(self) -> int:  # ssm inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 (TPU lane alignment + mesh
+        divisibility).  Logits over padding are masked to -inf in the loss."""
+        return pad_to_multiple(self.vocab, 256)
+
+    @property
+    def qk_head_dim(self) -> int:
+        return (self.qk_nope_dim + self.qk_rope_dim) if self.kv_lora_rank else self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count N (for MODEL_FLOPS = 6 N D)."""
+        from repro.models.model import analytic_param_count
+
+        return analytic_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import analytic_param_count
+
+        return analytic_param_count(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        # decode cells process ONE new token per sequence; train/prefill the
+        # full sequence.
+        return self.global_batch * (1 if self.kind == "decode" else self.seq_len)
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}

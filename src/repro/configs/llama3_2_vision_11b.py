@@ -1,0 +1,38 @@
+"""llama-3.2-vision-11b — VLM backbone: 40L d4096 32H (GQA kv=8, head_dim 128).
+
+d_ff=14336 vocab=128256; cross-attention image layers every 5th layer.
+The vision encoder is a STUB: input_specs() provides precomputed patch
+embeddings (global_batch, n_image_tokens, d_model).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    cross_attn_every=5,
+    n_image_tokens=1600,
+    rope_theta=500_000.0,
+)
+
+REDUCED = ArchConfig(
+    name="llama-3.2-vision-11b-reduced",
+    family="vlm",
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    cross_attn_every=5,
+    n_image_tokens=16,
+)

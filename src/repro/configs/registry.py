@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolution + paper-model configs."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeCell, SHAPE_CELLS
+
+_ARCH_MODULES = {
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "llama-3.2-vision-11b": "repro.configs.llama3_2_vision_11b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "whisper-small": "repro.configs.whisper_small",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+# Cells that require sub-quadratic / bounded-window decode memory.  Pure
+# full-attention archs skip long_500k (see DESIGN.md §6 skip table).
+LONG_CONTEXT_ARCHS = {"mamba2-130m", "zamba2-1.2b", "h2o-danube-1.8b"}
+
+
+def get_arch(arch_id: str, *, reduced: bool = False) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeCell:
+    return SHAPE_CELLS[name]
+
+
+def cell_is_runnable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) for one (arch x shape) cell."""
+    if shape_name == "long_500k" and arch_id not in LONG_CONTEXT_ARCHS:
+        return False, "full-attention arch: 500k-token KV decode is out of regime (DESIGN.md §6)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every runnable (arch, shape) cell, in registry order."""
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPE_CELLS:
+            ok, _ = cell_is_runnable(a, s)
+            if ok:
+                out.append((a, s))
+    return out

@@ -1,0 +1,39 @@
+"""Paper core: randomized subspace iteration compression (Alg 3.1 + Thm 3.2)."""
+
+from repro.core.rsi import (  # noqa: F401
+    RSIResult,
+    rsi,
+    rsvd,
+    rsi_factors,
+    cholesky_qr,
+    cholesky_qr2,
+    rsi_flops,
+    matmul_count,
+)
+from repro.core.spectral import (  # noqa: F401
+    spectral_norm,
+    normalized_error,
+    normalized_error_factored,
+    synth_spectrum_matrix,
+    vgg_like_spectrum,
+    effective_rank,
+    spectralize_params,
+)
+from repro.core.bounds import (  # noqa: F401
+    softmax_jacobian,
+    softmax_perturbation_bound,
+    CompressionCertificate,
+    certify_head,
+)
+from repro.core.lowrank import (  # noqa: F401
+    is_lowrank,
+    lowrank_params,
+    apply_linear,
+    break_even_rank,
+    materialize,
+)
+from repro.core.compress import (  # noqa: F401
+    CompressionPolicy,
+    CompressionReport,
+    compress_tree,
+)

@@ -1,0 +1,87 @@
+"""Theorem 3.2 machinery: softmax-perturbation certificates for compression.
+
+The paper's theory: for logits z = W h(x) + b and z~ = W~ h(x) + b,
+
+    || softmax(z~) - softmax(z) ||_inf  <=  (1/2) * R * ||W - W~||_2,
+
+with R >= sup_x ||h(x)||_2.  This module provides the Jacobian (Lemma 3.1),
+the bound itself, and a *certificate* object used by the compression pipeline
+to report per-layer reliability guarantees (the framework-level feature built
+on the theorem: given calibration features, certify the maximum probability
+deviation of the compressed classifier head).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "softmax_jacobian",
+    "softmax_perturbation_bound",
+    "CompressionCertificate",
+    "certify_head",
+]
+
+
+def softmax_jacobian(u: jax.Array) -> jax.Array:
+    """Lemma 3.1: J_sigma(u) = diag(sigma(u)) - sigma(u) sigma(u)^T."""
+    s = jax.nn.softmax(u)
+    return jnp.diag(s) - jnp.outer(s, s)
+
+
+def softmax_perturbation_bound(spectral_err: jax.Array, R: jax.Array) -> jax.Array:
+    """Theorem 3.2 RHS: (1/2) R ||W - W~||_2."""
+    return 0.5 * R * spectral_err
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionCertificate:
+    """Reliability certificate for one compressed classifier head.
+
+    Attributes:
+      spectral_error: estimated ||W - W~||_2.
+      feature_radius: R, max ||h(x)||_2 over the calibration set (plus slack).
+      prob_deviation_bound: (1/2) R ||W - W~||_2 — Thm 3.2 guarantee on every
+        class probability for every input with ||h|| <= R.
+      rank: rank of the approximation.
+      q: RSI iteration count used.
+    """
+
+    spectral_error: float
+    feature_radius: float
+    prob_deviation_bound: float
+    rank: int
+    q: int
+
+    def guarantees_top1_stability(self, margin: float) -> bool:
+        """If the calibration top-1 softmax margin exceeds 2x the bound, the
+        argmax prediction provably cannot flip for those inputs."""
+        return margin > 2.0 * self.prob_deviation_bound
+
+
+def certify_head(
+    W: jax.Array,
+    W_approx: jax.Array,
+    calib_features: jax.Array,
+    key: jax.Array,
+    *,
+    rank: int,
+    q: int,
+    radius_slack: float = 1.0,
+) -> CompressionCertificate:
+    """Build a Thm-3.2 certificate from a calibration feature batch (N, D)."""
+    from repro.core.spectral import spectral_norm
+
+    err = float(spectral_norm(W - W_approx, key))
+    R = float(jnp.max(jnp.linalg.norm(calib_features.astype(jnp.float32), axis=-1)))
+    R *= radius_slack
+    return CompressionCertificate(
+        spectral_error=err,
+        feature_radius=R,
+        prob_deviation_bound=float(softmax_perturbation_bound(err, R)),
+        rank=rank,
+        q=q,
+    )

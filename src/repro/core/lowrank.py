@@ -1,0 +1,76 @@
+"""Factored (low-rank) linear parameters: W (in,out) ~= A (in,k) @ B (k,out).
+
+Convention note: the paper writes z = W h with W in R^{C x D} (out x in).  The
+framework stores every linear kernel in the JAX-native orientation (d_in,
+d_out) with y = x @ W; RSI is orientation-agnostic so the factors here are the
+transposes of the paper's (A_paper, B_paper) — parameter counts and spectral
+errors are identical.
+
+A compressed linear is represented *structurally* in the params pytree: the
+dense leaf ``W`` is replaced by the subtree ``{"a": A, "b": B}``.  Every
+linear-apply site in the model zoo goes through :func:`apply_linear`, so a
+compressed checkpoint is a drop-in replacement for a dense one in both the
+training and serving paths.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "is_lowrank",
+    "lowrank_params",
+    "apply_linear",
+    "param_count",
+    "break_even_rank",
+    "materialize",
+]
+
+
+def is_lowrank(p: Any) -> bool:
+    return isinstance(p, Mapping) and "a" in p and "b" in p
+
+
+def lowrank_params(A: jax.Array, B: jax.Array) -> dict:
+    return {"a": A, "b": B}
+
+
+def apply_linear(p: Any, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """y = x @ W for dense W, or (x @ A) @ B for the factored form.
+
+    ``use_pallas`` routes the factored product through the fused
+    kernels.lowrank_matmul VMEM-resident kernel (TPU hot path).
+    """
+    if is_lowrank(p):
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            return kops.lowrank_matmul(x, p["a"], p["b"])
+        t = jnp.matmul(x, p["a"], preferred_element_type=jnp.float32)
+        return jnp.matmul(t.astype(x.dtype), p["b"], preferred_element_type=jnp.float32).astype(
+            x.dtype
+        )
+    return jnp.matmul(x, p, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def param_count(p: Any) -> int:
+    if is_lowrank(p):
+        return p["a"].size + p["b"].size
+    return p.size
+
+
+def break_even_rank(d_in: int, d_out: int) -> int:
+    """Largest k for which (d_in + d_out) * k < d_in * d_out."""
+    return (d_in * d_out - 1) // (d_in + d_out)
+
+
+def materialize(p: Any) -> jax.Array:
+    """Densify a (possibly factored) kernel — for analysis/tests only."""
+    if is_lowrank(p):
+        a32 = p["a"].astype(jnp.float32)
+        b32 = p["b"].astype(jnp.float32)
+        return (a32 @ b32).astype(p["a"].dtype)
+    return p

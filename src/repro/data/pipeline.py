@@ -1,0 +1,74 @@
+"""Host-side data pipeline: device placement + background prefetch.
+
+On a real multi-host pod each process feeds only its addressable shard of the
+("pod","data")-sharded batch; ``shard_batch`` builds the global-shape arrays
+with the right NamedSharding (single-controller semantics in this container,
+jax.make_array_from_process_local_data on real fleets).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["shard_batch", "Prefetcher", "batch_sharding"]
+
+
+def batch_sharding(rules, ndim_map: dict):
+    """NamedShardings for a batch dict: batch dim over ("pod","data")."""
+    out = {}
+    for name, ndim in ndim_map.items():
+        spec = ("batch",) + (None,) * (ndim - 1)
+        out[name] = spec
+    return out
+
+
+def shard_batch(batch: dict, rules) -> dict:
+    out = {}
+    for name, arr in batch.items():
+        spec = rules.spec(("batch",) + (None,) * (arr.ndim - 1), arr.shape)
+        out[name] = jax.device_put(arr, NamedSharding(rules.mesh, spec))
+    return out
+
+
+class Prefetcher:
+    """Background-thread prefetch of host batches onto devices."""
+
+    def __init__(self, it, rules=None, depth: int = 2):
+        self.it, self.rules = it, rules
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        try:
+            for b in self.it:
+                if self._stop.is_set():
+                    return
+                if self.rules is not None:
+                    b = shard_batch(b, self.rules)
+                else:
+                    b = jax.tree_util.tree_map(jax.numpy.asarray, b)
+                self.q.put(b)
+        except Exception as e:  # surface worker errors to the consumer
+            self.q.put(e)
+        self.q.put(StopIteration())
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if isinstance(item, StopIteration):
+            raise item
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal flash attention (prefill forward).
+
+Standard online-softmax tiling: grid (batch*kv_heads*groups, Sq/bq, Skv/bkv)
+with the KV axis innermost (sequential); running (m, l, acc) live in VMEM
+scratch across KV steps.  The XLA path in models/attention.py remains the
+autodiff/dry-run reference; this kernel is the TPU serving/prefill hot path
+(forward only — training uses the custom-vjp XLA flash).
+
+Block sizes default to (bq, bkv) = (256, 512): MXU-aligned (both multiples
+of 128) and ~2.5 MiB VMEM at hd=128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, causal: bool, n_kv: int, bq: int, bkv: int
+):
+    iq = pl.program_id(1)
+    jkv = pl.program_id(2)
+
+    @pl.when(jkv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (bq, hd)
+    k = k_ref[0]  # (bkv, hd)
+    v = v_ref[0]  # (bkv, vd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+    if causal:
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = jkv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(jkv == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, H, hd)  (same head count: repeat GQA upstream)
+    v: jax.Array,  # (B, Skv, H, vd)
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bkv: int = 512,
+    interpret: bool = False,
+):
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    vd = v.shape[-1]
+    bq_ = min(bq, Sq)
+    bkv_ = min(bkv, Skv)
+    while Sq % bq_:
+        bq_ //= 2
+    while Skv % bkv_:
+        bkv_ //= 2
+    # (B*H, S, hd) layout so the head axis rides the parallel grid dim
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, vd)
+    grid = (B * H, Sq // bq_, Skv // bkv_)
+
+    out = pl.pallas_call(
+        functools.partial(
+            flash_attention_kernel,
+            scale=hd**-0.5,
+            causal=causal,
+            n_kv=grid[2],
+            bq=bq_,
+            bkv=bkv_,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv_, hd), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv_, vd), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, vd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, vd).transpose(0, 2, 1, 3)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused low-rank linear  y = (x @ A) @ B.
+
+The serving hot path of an RSI-compressed model.  Two XLA GEMMs would
+round-trip the (M, r) intermediate through HBM; here it lives in a VMEM
+scratch accumulator for the whole reduction:
+
+  grid (M/bm, K/bk)  — K is the reduction (sequential) axis
+    t[bm, r]   += x[bm, bk] @ A[bk, r]          (fp32 scratch)
+    on last k:  y[bm, N]    = t @ B[r, N]       (B resident in VMEM)
+
+VMEM budget @ bf16, bm=256, bk=512, r<=256, N<=8192:
+  x 256KiB + A 256KiB + B 4MiB + t 256KiB(f32) + y 4MiB(f32->bf16) ~= 9MiB.
+The ops.py wrapper falls back to two tiled GEMMs when r/N exceed the
+residency limits (checked statically).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["lowrank_matmul_kernel", "lowrank_matmul_pallas", "fits_fused"]
+
+# conservative VMEM residency limits for the fused path
+_MAX_RANK = 512
+_MAX_N = 8192
+
+
+def fits_fused(r: int, n: int) -> bool:
+    return r <= _MAX_RANK and n <= _MAX_N
+
+
+def lowrank_matmul_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        t = acc_ref[...].astype(x_ref.dtype)
+        o_ref[...] = jnp.dot(
+            t, b_ref[...], preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def lowrank_matmul_pallas(
+    x: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = (x @ A) @ B.  x: (M, K); A: (K, r); B: (r, N)."""
+    M, K = x.shape
+    K2, r = A.shape
+    r2, N = B.shape
+    assert K == K2 and r == r2, (x.shape, A.shape, B.shape)
+    assert fits_fused(r, N), "use the two-GEMM fallback (ops.lowrank_matmul)"
+    bm_, bk_ = min(bm, M), min(bk, K)
+    x_p = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
+    a_p = _pad_to(A, bk_, 0)
+    Mp, Kp = x_p.shape
+    grid = (Mp // bm_, Kp // bk_)
+
+    out = pl.pallas_call(
+        functools.partial(lowrank_matmul_kernel, n_k=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda m, k: (m, k)),
+            pl.BlockSpec((bk_, r), lambda m, k: (k, 0)),
+            pl.BlockSpec((r, N), lambda m, k: (0, 0)),  # B resident
+        ],
+        out_specs=pl.BlockSpec((bm_, N), lambda m, k: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, r), jnp.float32)],
+        interpret=interpret,
+    )(x_p, a_p, B)
+    return out[:M]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sketch_matmul_ref(a, b):
+    """(M,K) @ (K,N) with fp32 accumulation — RSI sketch GEMM oracle."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def lowrank_matmul_ref(x, A, B):
+    """y = (x @ A) @ B — compressed-linear serving oracle."""
+    t = jnp.matmul(x, A, preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.matmul(t, B, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ssd_scan_ref(xbar, dt, B_in, C_in, A):
+    """Sequential (non-chunked) SSD recurrence oracle.
+
+    xbar: (B, L, nh, hd) dt-scaled inputs; dt: (B, L, nh); B_in/C_in: (B, L, s);
+    A: (nh,) negative.  Returns (y (B,L,nh,hd), final_state (B,nh,hd,s))."""
+    Bsz, L, nh, hd = xbar.shape
+    s = B_in.shape[-1]
+
+    def step(state, inp):
+        xb_t, dt_t, b_t, c_t = inp  # (B,nh,hd),(B,nh),(B,s),(B,s)
+        decay = jnp.exp(dt_t * A[None, :])  # (B,nh)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bs,bhd->bhds", b_t.astype(jnp.float32), xb_t.astype(jnp.float32)
+        )
+        y = jnp.einsum("bs,bhds->bhd", c_t.astype(jnp.float32), state)
+        return state, y
+
+    state0 = jnp.zeros((Bsz, nh, hd, s), jnp.float32)
+    inputs = (
+        xbar.swapaxes(0, 1),
+        dt.astype(jnp.float32).swapaxes(0, 1),
+        B_in.swapaxes(0, 1),
+        C_in.swapaxes(0, 1),
+    )
+    state, ys = jax.lax.scan(step, state0, inputs)
+    return ys.swapaxes(0, 1).astype(xbar.dtype), state
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Plain softmax attention oracle.  q/k/v: (B, S, H, hd) (same H)."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (inner chunk computation).
+
+TPU-native adaptation of the CUDA selective-scan: the sequence is tiled into
+chunks of Q steps; the kernel walks chunks SEQUENTIALLY on the second grid
+axis (TPU grids iterate the last axis innermost, and the VMEM scratch
+``state_ref`` (nh, hd, s) persists across grid steps — it carries the
+inter-chunk recurrence).  Within a chunk everything is dense MXU work:
+
+    y_intra = (C B^T ∘ decay-mask) x̄      — (Q x Q) masked matmul
+    y_inter = (C · state) ∘ exp(lcum)
+    state   = state * exp(l_last) + (B ∘ w)^T x̄
+
+Grid: (batch, n_chunks).  Block shapes: x̄ (Q, nh, hd), dt/lcum (Q, nh),
+B/C (Q, s).  VMEM @ Q=256, nh=24, hd=64, s=128: x 768KiB + state 768KiB(f32)
++ masks ~256KiB — comfortable.  Head dim nh*hd maps to the 8x128 VREG lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel", "ssd_scan_pallas"]
+
+
+def ssd_scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_out_ref, state_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xq = x_ref[0].astype(jnp.float32)  # (Q, nh, hd)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q, nh)
+    bq = b_ref[0].astype(jnp.float32)  # (Q, s)
+    cq = c_ref[0].astype(jnp.float32)  # (Q, s)
+    A = a_ref[...].astype(jnp.float32)  # (nh,)
+    Q = xq.shape[0]
+
+    da = dt * A[None, :]  # (Q, nh) negative
+    lcum = jnp.cumsum(da, axis=0)  # (Q, nh)
+    xbar = xq * dt[:, :, None]
+
+    # intra-chunk masked quadratic
+    cb = jnp.dot(cq, bq.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    seg = lcum[:, None, :] - lcum[None, :, :]  # (Q, Q, nh) l_t - l_u
+    tri = jnp.tril(jnp.ones((Q, Q), dtype=jnp.bool_))
+    m = jnp.exp(jnp.where(tri[:, :, None], seg, -1e30))  # (Q, Q, nh)
+    y_intra = jnp.einsum("tu,tuh,uhd->thd", cb, m, xbar)
+
+    # inter-chunk from carried state
+    state = state_ref[...]  # (nh, hd, s) fp32
+    y_inter = jnp.einsum("ts,hds,th->thd", cq, state, jnp.exp(lcum))
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    l_last = lcum[-1:, :]  # (1, nh)
+    w_in = jnp.exp(l_last - lcum)  # (Q, nh)
+    state_new = state * jnp.exp(l_last)[0, :, None, None] + jnp.einsum(
+        "us,uh,uhd->hds", bq, w_in, xbar
+    )
+    state_ref[...] = state_new
+    state_out_ref[0] = state_new
+
+
+def _pad_chunk(x, Q, axis):
+    pad = (-x.shape[axis]) % Q
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, L, nh, hd)  raw inputs (NOT dt-scaled; kernel scales)
+    dt: jax.Array,  # (B, L, nh) fp32 post-softplus
+    B_in: jax.Array,  # (B, L, s)
+    C_in: jax.Array,  # (B, L, s)
+    A: jax.Array,  # (nh,) negative reals
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,L,nh,hd), final_state (B,nh,hd,s) fp32)."""
+    Bsz, L, nh, hd = x.shape
+    s = B_in.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q //= 2
+    nc = L // Q
+
+    out, states = pl.pallas_call(
+        ssd_scan_kernel,
+        grid=(Bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, nh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, s), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, s), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((nh,), lambda b, c: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, nh, hd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, nh, hd, s), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, L, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, nh, hd, s), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, hd, s), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), B_in, C_in, A.astype(jnp.float32))
+    return out, states

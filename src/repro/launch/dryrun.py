@@ -1,0 +1,297 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the REAL step function (train_step for train
+shapes, prefill/serve steps for inference shapes) with production shardings,
+lowers it against ShapeDtypeStruct stand-ins (zero allocation), compiles it
+for the 16x16 single-pod AND 2x16x16 multi-pod host-device meshes, and
+records memory_analysis / cost_analysis / parsed-collective roofline terms
+into benchmarks/dryrun_results/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --skip-existing
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.configs.registry import all_cells, cell_is_runnable, get_arch, get_shape, ARCH_IDS
+from repro.launch.mesh import HW, make_production_mesh, make_rules
+from repro.models.model import analytic_param_count, batch_spec_template, build_model
+from repro.roofline.analysis import parse_collectives, roofline_terms
+from repro.roofline.hlo_stats import analyze_hlo
+from repro.sharding.rules import param_specs
+from repro.train import optimizer as opt_mod
+from repro.train.serve_step import cache_specs, make_decode_step, make_prefill_step
+from repro.train.train_step import (
+    TrainState,
+    make_train_step,
+    state_specs,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "dryrun_results")
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the
+    pattern required by the dry-run: weak-type-correct, shardable, no device
+    allocation)."""
+    tmpl = batch_spec_template(cfg, cell.global_batch, cell.seq_len, kind=cell.kind)
+    return {k: jax.ShapeDtypeStruct(shape, dtype) for k, (shape, dtype) in tmpl.items()}
+
+
+def _make_optimizer(cfg):
+    sched = opt_mod.cosine_schedule(3e-4, 2000, 100_000)
+    if cfg.optimizer == "adafactor":
+        return opt_mod.adafactor(sched)
+    if cfg.optimizer == "sgdm":
+        return opt_mod.sgdm(sched)
+    return opt_mod.adamw(sched)
+
+
+def _shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _batch_shardings(batch_struct, rules):
+    return {
+        k: NamedSharding(
+            rules.mesh, rules.spec(("batch",) + (None,) * (v.ndim - 1), v.shape)
+        )
+        for k, v in batch_struct.items()
+    }
+
+
+def build_lowered(arch_id: str, shape_name: str, mesh, *, reduced: bool = False):
+    """Returns (lowered, meta) for one cell."""
+    cfg = get_arch(arch_id, reduced=reduced)
+    cell = get_shape(shape_name)
+    rules = make_rules(mesh, sequence_parallel=cell.kind != "decode")
+    model = build_model(cfg)
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_struct, rules)
+    p_sh = _shardings(p_specs, mesh)
+    batch_struct = input_specs(cfg, cell)
+    b_sh = _batch_shardings(batch_struct, rules)
+
+    if cell.kind == "train":
+        opt = _make_optimizer(cfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        state_struct = TrainState(
+            params=params_struct,
+            opt_state=opt_struct,
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        st_specs = state_specs(state_struct, rules)
+        st_sh = TrainState(
+            params=_shardings(st_specs.params, mesh),
+            opt_state=_shardings(st_specs.opt_state, mesh),
+            step=NamedSharding(mesh, P()),
+        )
+        step_fn = make_train_step(model, opt, rules=rules, accum_steps=cfg.accum_steps)
+        metric_sh = {k: NamedSharding(mesh, P()) for k in ("loss", "aux_loss", "grad_norm")}
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, metric_sh),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_struct, batch_struct)
+    elif cell.kind == "prefill":
+        fn = make_prefill_step(model, rules=rules, max_len=cell.seq_len)
+        out_struct = jax.eval_shape(fn, params_struct, batch_struct)
+        logits_sh = NamedSharding(
+            mesh, rules.spec(("batch", "tp_vocab"), out_struct[0].shape)
+        )
+        c_specs = cache_specs(out_struct[1], rules)
+        c_sh = _shardings(c_specs, mesh)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=(logits_sh, c_sh))
+        lowered = jitted.lower(params_struct, batch_struct)
+    elif cell.kind == "decode":
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(cell.global_batch, cell.seq_len)
+        )
+        c_specs = cache_specs(cache_struct, rules)
+        c_sh = _shardings(c_specs, mesh)
+        fn = make_decode_step(model, rules=rules)
+        pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+        logits_struct = jax.eval_shape(
+            fn, params_struct, cache_struct, batch_struct["tokens"], pos_struct
+        )[0]
+        logits_sh = NamedSharding(mesh, rules.spec(("batch", "tp_vocab"), logits_struct.shape))
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, b_sh["tokens"], NamedSharding(mesh, P())),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_struct, cache_struct, batch_struct["tokens"], pos_struct)
+    else:
+        raise ValueError(cell.kind)
+
+    n_params = analytic_param_count(cfg)
+    n_active = analytic_param_count(cfg, active_only=True)
+    meta = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "kind": cell.kind,
+        "tokens": cell.tokens,
+        "n_params": n_params,
+        "n_params_active": n_active,
+        "model_flops_global": _model_flops(cfg, cell, n_params, n_active),
+    }
+    return lowered, meta
+
+
+def _model_flops(cfg, cell, n_params, n_active):
+    """6*N*D (train: fwd+bwd), 2*N*D (inference fwd only), N = active params."""
+    mult = 6 if cell.kind == "train" else 2
+    return mult * n_active * cell.tokens
+
+
+def run_cell(arch_id, shape_name, *, multi_pod: bool, reduced=False, save=True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    tag = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    t0 = time.time()
+    lowered, meta = build_lowered(arch_id, shape_name, mesh, reduced=reduced)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    # cost_analysis counts while bodies ONCE (no trip counts) — useless for
+    # scanned models.  analyze_hlo walks the module with trip-count
+    # multiplication; we record both (raw for reference).
+    xla_flops_raw = float(cost.get("flops", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        }
+        # donated inputs alias outputs: count them once
+        mem_info["total_bytes"] = (
+            mem_info["argument_bytes"]
+            + mem_info["output_bytes"]
+            + mem_info["temp_bytes"]
+            - mem_info["alias_bytes"]
+        )
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": repr(e)}
+
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo, world=chips)
+    flops = stats.flops
+    hbm_bytes = stats.hbm_bytes
+    rf = roofline_terms(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=stats.total_coll_bytes,
+        chips=chips,
+        model_flops_global=meta["model_flops_global"],
+        ici_bw=HW.ICI_LINK_BW * HW.ICI_LINKS_USED,
+    )
+    result = {
+        **meta,
+        "mesh": tag,
+        "chips": chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_chip": flops,
+        "xla_cost_analysis_flops_raw": xla_flops_raw,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "collective_bytes_per_chip": stats.total_coll_bytes,
+        "collectives_by_kind": stats.coll_bytes,
+        "collective_op_count": stats.coll_ops,
+        "memory": mem_info,
+        "t_compute": rf.t_compute,
+        "t_memory": rf.t_memory,
+        "t_collective": rf.t_collective,
+        "bottleneck": rf.bottleneck,
+        "useful_flops_ratio": rf.useful_flops_ratio,
+        "roofline_fraction": rf.roofline_fraction,
+        "hlo_bytes": len(hlo),
+    }
+    if save:
+        outdir = os.path.join(os.path.abspath(RESULTS_DIR), tag)
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, f"{arch_id}__{shape_name}.json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reduced", action="store_true", help="debug: tiny configs")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else None
+    if cells is None:
+        if not args.arch:
+            ap.error("--arch/--shape or --all required")
+        shapes = [args.shape] if args.shape else [
+            s for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+            if cell_is_runnable(args.arch, s)[0]
+        ]
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch_id, shape_name in cells:
+        ok, why = cell_is_runnable(arch_id, shape_name)
+        if not ok:
+            print(f"SKIP  {arch_id:24s} {shape_name:12s} ({why})")
+            continue
+        for mp in meshes:
+            tag = "multi_pod_2x16x16" if mp else "single_pod_16x16"
+            out = os.path.join(os.path.abspath(RESULTS_DIR), tag, f"{arch_id}__{shape_name}.json")
+            if args.skip_existing and os.path.exists(out):
+                print(f"HAVE  {arch_id:24s} {shape_name:12s} {tag}")
+                continue
+            try:
+                r = run_cell(arch_id, shape_name, multi_pod=mp, reduced=args.reduced)
+                print(
+                    f"OK    {arch_id:24s} {shape_name:12s} {tag:18s} "
+                    f"compile={r['compile_s']:7.1f}s  bottleneck={r['bottleneck']:10s} "
+                    f"t=({r['t_compute']:.3f},{r['t_memory']:.3f},{r['t_collective']:.3f})s "
+                    f"mem={r['memory'].get('total_bytes', 0)/2**30:.2f}GiB/chip"
+                )
+            except Exception as e:
+                failures.append((arch_id, shape_name, tag, repr(e)))
+                print(f"FAIL  {arch_id:24s} {shape_name:12s} {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for f in failures:
+            print("  ", *f[:3])
+        raise SystemExit(1)
+    print("\nall requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

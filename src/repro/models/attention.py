@@ -1,0 +1,523 @@
+"""Attention variants: GQA (+SWA, +bias), MLA (deepseek), cross-attention.
+
+Memory discipline: training/prefill attention is *chunked* (flash-style
+online softmax written in XLA: outer lax.scan over query chunks, inner
+lax.scan over KV chunks, fp32 running max/denominator).  Nothing of size
+S x S is ever materialized, which is what lets the 32k-prefill cells fit.
+An optional Pallas flash kernel (kernels/flash_attention.py) replaces the
+inner loop on real TPUs; the XLA path is the dry-run/compile target.
+
+Decode: single-token attention over a preallocated KV cache.
+Sliding-window archs use a RING-BUFFER cache of size ``window`` (keys stored
+with rope pre-applied), so a 500k-context SWA decode holds only O(window)
+state.  MLA decode uses the absorbed-weight latent trick: scores and context
+are computed directly in the kv_lora latent space, so the cache is
+(kv_lora + rope_dim) per token instead of 2*H*head_dim.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.sharding.rules import maybe_constrain
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Core chunked attention (training / prefill)
+# --------------------------------------------------------------------------- #
+def _pick_chunk(s: int, target: int) -> int:
+    c = min(target, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+def _mask_for(iq, jkv, cq, ckv, *, causal, window, q_offset):
+    q_pos = q_offset + iq * cq + jnp.arange(cq)
+    k_pos = jkv * ckv + jnp.arange(ckv)
+    mask = jnp.ones((cq, ckv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def _flash_fwd_pass(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    """Online-softmax forward.  Returns (out (B,Sq,H,vd), lse (B,KV,G,Sq))."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    scale = hd**-0.5
+    cq = _pick_chunk(Sq, q_chunk)
+    ckv = _pick_chunk(Skv, kv_chunk)
+    nq, nkv = Sq // cq, Skv // ckv
+
+    qg = q.reshape(B, nq, cq, KV, G, hd)
+    kg = k.reshape(B, nkv, ckv, KV, hd)
+    vg = v.reshape(B, nkv, ckv, KV, vd)
+
+    def q_body(_, qi):
+        q_blk, iq = qi  # (B, cq, KV, G, hd)
+        qs = (q_blk.astype(jnp.float32) * scale).astype(q.dtype)
+
+        def kv_body(carry, kvj):
+            m, l, acc = carry
+            k_blk, v_blk, jkv = kvj
+            s = jnp.einsum(
+                "bqkgh,bckh->bkgqc", qs, k_blk, preferred_element_type=jnp.float32
+            )  # (B, KV, G, cq, ckv) fp32
+            mask = _mask_for(iq, jkv, cq, ckv, causal=causal, window=window, q_offset=q_offset)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckv->bkgqv",
+                p.astype(v.dtype),
+                v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body,
+            (m0, l0, a0),
+            (kg.swapaxes(0, 1), vg.swapaxes(0, 1), jnp.arange(nkv)),
+        )
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]  # (B, KV, G, cq, vd)
+        lse = m + jnp.log(l_safe)  # (B, KV, G, cq)
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (qg.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, vd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Sq)
+    return out.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    out, _ = _flash_fwd_pass(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    out, lse = _flash_fwd_pass(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_chunk, kv_chunk, q_offset, res, dout):
+    """Flash-attention backward: probabilities are RECOMPUTED per (q, kv)
+    chunk pair from the saved lse — only O(S·H) residuals are kept, never
+    the O(S^2) score/probability stacks that plain autodiff-through-scan
+    would save.  This is what makes 32k-token training cells fit in HBM."""
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    scale = hd**-0.5
+    cq = _pick_chunk(Sq, q_chunk)
+    ckv = _pick_chunk(Skv, kv_chunk)
+    nq, nkv = Sq // cq, Skv // ckv
+
+    qg = q.reshape(B, nq, cq, KV, G, hd)
+    kg = k.reshape(B, nkv, ckv, KV, hd)
+    vg = v.reshape(B, nkv, ckv, KV, vd)
+    dog = dout.reshape(B, nq, cq, KV, G, vd)
+    og = out.reshape(B, nq, cq, KV, G, vd)
+    lseg = lse.reshape(B, KV, G, nq, cq)
+    # delta = rowsum(dout * out) (B, nq, KV, G, cq)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+    delta = delta.transpose(0, 1, 3, 4, 2)  # (B, nq, KV, G, cq)
+
+    def q_body(carry, qi):
+        dk_full, dv_full = carry  # fp32 (B, Skv, KV, hd/vd)
+        q_blk, do_blk, lse_blk, delta_blk, iq = qi
+        qs = (q_blk.astype(jnp.float32) * scale).astype(q.dtype)
+
+        def kv_body(inner, kvj):
+            dq_acc, dk_f, dv_f = inner
+            jkv = kvj
+            k_blk = jax.lax.dynamic_slice_in_dim(kg, jkv, 1, axis=1)[:, 0]
+            v_blk = jax.lax.dynamic_slice_in_dim(vg, jkv, 1, axis=1)[:, 0]
+            s = jnp.einsum(
+                "bqkgh,bckh->bkgqc", qs, k_blk, preferred_element_type=jnp.float32
+            )
+            mask = _mask_for(iq, jkv, cq, ckv, causal=causal, window=window, q_offset=q_offset)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])  # (B,KV,G,cq,ckv)
+            pb = p.astype(v.dtype)
+            # dv += p^T @ dout
+            dv_blk = jnp.einsum(
+                "bkgqc,bqkgv->bckv", pb, do_blk, preferred_element_type=jnp.float32
+            )
+            # dp = dout @ v^T ; ds = p * (dp - delta)
+            dp = jnp.einsum(
+                "bqkgv,bckv->bkgqc", do_blk, v_blk, preferred_element_type=jnp.float32
+            )
+            ds = p * (dp - delta_blk[..., None])  # fp32
+            dsb = ds.astype(q.dtype)
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqc,bckh->bqkgh", dsb, k_blk, preferred_element_type=jnp.float32
+            )
+            dk_blk = jnp.einsum(
+                "bkgqc,bqkgh->bckh", dsb, qs, preferred_element_type=jnp.float32
+            )
+            dk_f = jax.lax.dynamic_update_slice_in_dim(
+                dk_f, jax.lax.dynamic_slice_in_dim(dk_f, jkv * ckv, ckv, axis=1) + dk_blk,
+                jkv * ckv, axis=1,
+            )
+            dv_f = jax.lax.dynamic_update_slice_in_dim(
+                dv_f, jax.lax.dynamic_slice_in_dim(dv_f, jkv * ckv, ckv, axis=1) + dv_blk,
+                jkv * ckv, axis=1,
+            )
+            return (dq_acc, dk_f, dv_f), None
+
+        dq0 = jnp.zeros((B, cq, KV, G, hd), jnp.float32)
+        (dq_blk, dk_full, dv_full), _ = jax.lax.scan(
+            kv_body, (dq0, dk_full, dv_full), jnp.arange(nkv)
+        )
+        return (dk_full, dv_full), dq_blk * scale
+
+    dk0 = jnp.zeros((B, Skv, KV, hd), jnp.float32)
+    dv0 = jnp.zeros((B, Skv, KV, vd), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_body,
+        (dk0, dv0),
+        (
+            qg.swapaxes(0, 1),
+            dog.swapaxes(0, 1),
+            lseg.transpose(3, 0, 1, 2, 4),
+            delta.swapaxes(0, 1),
+            jnp.arange(nq),
+        ),
+    )
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    window: int | None = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+):
+    """Online-softmax (flash) attention with memory-safe custom VJP.
+
+    q: (B, Sq, H, hd); k: (B, Skv, KV, hd); v: (B, Skv, KV, vd).
+    GQA via head grouping (H = KV * G).  Returns (B, Sq, H, vd).
+
+    Sharding boundary: activations arrive SEQUENCE-sharded (SP) from the
+    residual stream, but the flash loops slice KV chunks along the sequence —
+    dynamic-slicing a sharded dim forces a per-block-step all-gather (the
+    deepseek MLA cell paid a 3776x-repeated fp32 K/V gather for this).
+    Re-constrain q/k/v to HEAD sharding here: one resharding per layer
+    instead of one gather per flash block step.
+    """
+    from repro.sharding.rules import active_rules
+
+    rules = active_rules()
+    # Only force the resharding when the head dim actually maps onto the
+    # model axis — for head counts not divisible by the axis (minitron 24H,
+    # whisper 12H) a dropped-to-None constraint would force REPLICATION,
+    # regressing those cells ~4x (measured; see EXPERIMENTS.md §Perf B-3).
+    if rules is not None and rules.resolve("tp", q.shape[2]) is not None:
+        q = maybe_constrain(q, ("batch", None, "tp", None))
+        if rules.resolve("tp", k.shape[2]) is not None:
+            k = maybe_constrain(k, ("batch", None, "tp", None))
+            v = maybe_constrain(v, ("batch", None, "tp", None))
+        out = _flash(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
+        return maybe_constrain(out, ("batch", None, "tp", None))
+    return _flash(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, n_valid, *, rotate_mask=None):
+    """One-token attention over a cache.  q: (B, 1, H, hd); caches
+    (B, S, KV, *).  ``n_valid``: number of valid cache slots (scalar).
+    ``rotate_mask`` optionally marks valid slots for ring-buffer caches.
+
+    Memory discipline: the cache is NEVER cast — scores use fp32 MXU
+    accumulation via preferred_element_type (an astype here would
+    materialize a fp32 copy of the whole multi-GB cache).  The cache's
+    sequence dim is sharded over "model" (see serve_step.cache_specs);
+    the softmax over the sharded axis lowers to two tiny stat all-reduces
+    (flash-decode style) under the SPMD partitioner."""
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qh = (q.reshape(B, KV, G, hd).astype(jnp.float32) * hd**-0.5).astype(k_cache.dtype)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
+    if rotate_mask is None:
+        valid = jnp.arange(S)[None] < n_valid
+    else:
+        valid = rotate_mask
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskv->bkgv",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA block (llama / qwen / minitron / danube / zamba-shared / whisper-self)
+# --------------------------------------------------------------------------- #
+def gqa_init(key, cfg, dtype, *, d_model=None):
+    d = d_model or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = nn.split_key_tree(key, ["wq", "wk", "wv", "wo"])
+    p = {
+        "wq": nn.dense_init(ks["wq"], d, H * hd, dtype),
+        "wk": nn.dense_init(ks["wk"], d, KV * hd, dtype),
+        "wv": nn.dense_init(ks["wv"], d, KV * hd, dtype),
+        "wo": nn.dense_init(ks["wo"], H * hd, d, dtype, scale=(H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions, *, rope: bool, use_pallas=False):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.dense(p["wq"], x, use_pallas=use_pallas)
+    k = nn.dense(p["wk"], x, use_pallas=use_pallas)
+    v = nn.dense(p["wv"], x, use_pallas=use_pallas)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if rope:
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+    q = maybe_constrain(q, ("batch", None, "tp", None))
+    k = maybe_constrain(k, ("batch", None, "tp", None))
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, *, positions=None, causal=True, rope=True, return_cache=False):
+    """Full-sequence GQA attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, x, cfg, positions, rope=rope, use_pallas=cfg.use_pallas)
+    out = chunked_attention(q, k, v, causal=causal, window=cfg.sliding_window)
+    out = nn.dense(p["wo"], out.reshape(B, S, -1), use_pallas=cfg.use_pallas)
+    if not return_cache:
+        return out
+    # Prefill cache; SWA keeps only the last `window` positions (ring layout:
+    # slot i holds absolute position (S - W) + i ... rotated so that decode's
+    # pos % W indexing lines up).
+    W = cfg.sliding_window
+    if W is not None and S > W:
+        k_tail, v_tail = k[:, -W:], v[:, -W:]
+        # Place absolute position p at slot p % W.
+        slots = (jnp.arange(S - W, S)) % W
+        order = jnp.argsort(slots)
+        k_tail, v_tail = k_tail[:, order], v_tail[:, order]
+        return out, (k_tail, v_tail)
+    return out, (k, v)
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, dtype):
+    W = cfg.sliding_window
+    S = min(max_len, W) if W is not None else max_len
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, KV, hd), dtype),
+        "v": jnp.zeros((batch, S, KV, hd), dtype),
+    }
+
+
+def gqa_decode(p, x, cache, pos, cfg):
+    """x: (B, 1, d); pos: scalar int32 absolute position of the new token."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions, rope=True)
+    S = cache["k"].shape[1]
+    slot = pos % S  # ring for SWA; identity when S == max_len
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if cfg.sliding_window is not None and S == cfg.sliding_window:
+        n_valid = jnp.minimum(pos + 1, S)
+        rotate_mask = jnp.broadcast_to(jnp.arange(S)[None] < n_valid, (B, S))
+        out = decode_attention(q, k_cache, v_cache, n_valid, rotate_mask=rotate_mask)
+    else:
+        out = decode_attention(q, k_cache, v_cache, pos + 1)
+    out = nn.dense(p["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------- #
+# Cross-attention (VLM image layers, whisper decoder)
+# --------------------------------------------------------------------------- #
+def cross_attn_init(key, cfg, dtype):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    ks = nn.split_key_tree(key, ["wq", "wk", "wv", "wo"])
+    return {
+        "wq": nn.dense_init(ks["wq"], d, H * hd, dtype),
+        "wk": nn.dense_init(ks["wk"], d, H * hd, dtype),
+        "wv": nn.dense_init(ks["wv"], d, H * hd, dtype),
+        "wo": nn.dense_init(ks["wo"], H * hd, d, dtype, scale=(H * hd) ** -0.5),
+    }
+
+
+def cross_attn_kv(p, ctx, cfg):
+    """Precompute cross K/V from the (stub-frontend) context embeddings."""
+    B, T, _ = ctx.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    k = nn.dense(p["wk"], ctx).reshape(B, T, H, hd)
+    v = nn.dense(p["wv"], ctx).reshape(B, T, H, hd)
+    return k, v
+
+
+def cross_attn(p, x, kv, cfg):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    k, v = kv
+    q = nn.dense(p["wq"], x).reshape(B, S, H, hd)
+    out = chunked_attention(q, k, v, causal=False)
+    return nn.dense(p["wo"], out.reshape(B, S, -1))
+
+
+# --------------------------------------------------------------------------- #
+# MLA — multi-head latent attention (deepseek-v2)
+# --------------------------------------------------------------------------- #
+def mla_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lq, lkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = nn.split_key_tree(key, ["wq_a", "wq_b", "wkv_a", "wkv_b", "wo"])
+    return {
+        "wq_a": nn.dense_init(ks["wq_a"], d, lq, dtype),
+        "q_norm": nn.rmsnorm_init(lq, dtype),
+        "wq_b": nn.dense_init(ks["wq_b"], lq, H * (nope + rope_d), dtype),
+        "wkv_a": nn.dense_init(ks["wkv_a"], d, lkv + rope_d, dtype),
+        "kv_norm": nn.rmsnorm_init(lkv, dtype),
+        "wkv_b": nn.dense_init(ks["wkv_b"], lkv, H * (nope + vd), dtype),
+        "wo": nn.dense_init(ks["wo"], H * vd, d, dtype, scale=(H * vd) ** -0.5),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, nope, rope_d = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = nn.rmsnorm(p["q_norm"], nn.dense(p["wq_a"], x), cfg.norm_eps)
+    q = nn.dense(p["wq_b"], ql).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = nn.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    """Returns (c_kv normed (B,S,lkv), k_rope (B,S,rope_d) rope-applied)."""
+    lkv, rope_d = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv_a = nn.dense(p["wkv_a"], x)
+    c_kv = nn.rmsnorm(p["kv_norm"], kv_a[..., :lkv], cfg.norm_eps)
+    k_rope = kv_a[..., lkv:]
+    k_rope = nn.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, *, positions=None, return_cache=False):
+    """Prefill/train MLA: materialize per-head K/V from the latent."""
+    B, S, _ = x.shape
+    H, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lkv = cfg.kv_lora_rank
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+    kv = nn.dense(p["wkv_b"], c_kv).reshape(B, S, H, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = chunked_attention(q, k, v, causal=True)
+    out = nn.dense(p["wo"], out.reshape(B, S, -1))
+    if not return_cache:
+        return out
+    return out, (c_kv, k_rope)
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """Absorbed-weight MLA decode: attention entirely in latent space."""
+    B = x.shape[0]
+    H, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lkv = cfg.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope),(B,1,H,rope)
+    c_new, kr_new = _mla_latent(p, x, cfg, positions)  # (B,1,lkv),(B,1,rope)
+    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+
+    w_kv = p["wkv_b"] if not isinstance(p["wkv_b"], dict) else None
+    if w_kv is None:
+        # factored (RSI-compressed) wkv_b: densify the small latent matrix —
+        # lkv x H(nope+vd) is modest; the absorbed path needs the split views.
+        from repro.core.lowrank import materialize
+
+        w_kv = materialize(p["wkv_b"])
+    w_kv = w_kv.reshape(lkv, H, nope + vd)
+    w_uk, w_uv = w_kv[..., :nope], w_kv[..., nope:]
+
+    # Absorb: q_lat[b,h,l] = sum_n q_nope[b,h,n] * w_uk[l,h,n].
+    # Caches stay in their storage dtype (fp32 accumulation via
+    # preferred_element_type) — an astype would copy the whole latent cache.
+    q_lat = jnp.einsum(
+        "bhn,lhn->bhl", q_nope[:, 0], w_uk, preferred_element_type=jnp.float32
+    ).astype(c_cache.dtype)
+    scale = (nope + rope_d) ** -0.5
+    s = (
+        jnp.einsum("bhl,bsl->bhs", q_lat, c_cache, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bhr,bsr->bhs", q_rope[:, 0], r_cache, preferred_element_type=jnp.float32
+        )
+    ) * scale
+    valid = jnp.arange(c_cache.shape[1])[None] <= pos
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum(
+        "bhs,bsl->bhl", w.astype(c_cache.dtype), c_cache, preferred_element_type=jnp.float32
+    ).astype(c_cache.dtype)
+    out = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_uv, preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * vd).astype(x.dtype)
+    out = nn.dense(p["wo"], out)
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

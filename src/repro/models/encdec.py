@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+The conv mel-spectrogram frontend is OUT of scope per the assignment: the
+model consumes precomputed frame embeddings (B, n_frames, d_model) from
+``input_specs()``.  Positions are sinusoidal (whisper uses sinusoidal on the
+encoder, learned on the decoder; we use sinusoidal on both — noted deviation,
+irrelevant to systems behaviour).  Pre-LayerNorm blocks with GELU FFN,
+faithful to the architecture family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models import attention as attn
+from repro.sharding.rules import maybe_constrain
+
+__all__ = [
+    "encdec_init",
+    "encdec_forward",
+    "encdec_encode",
+    "encdec_init_cache",
+    "encdec_prefill",
+    "encdec_decode_step",
+]
+
+
+def _ffn_init(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": nn.dense_init(k1, d, f, dtype),
+        "w_down": nn.dense_init(k2, f, d, dtype, scale=f**-0.5),
+    }
+
+
+def _ffn(p, x, use_pallas=False):
+    h = nn.dense(p["w_up"], x, use_pallas=use_pallas)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = maybe_constrain(h, ("batch", None, "tp"))
+    return nn.dense(p["w_down"], h, use_pallas=use_pallas)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "mlp_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "mlp": _ffn_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "cross_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "cross": attn.cross_attn_init(k2, cfg, dtype),
+        "mlp_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "mlp": _ffn_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def encdec_init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = nn.split_key_tree(key, ["embed", "enc", "dec", "head"])
+    enc_keys = jax.random.split(ks["enc"], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks["dec"], cfg.n_layers)
+    return {
+        "embed": nn.embed_init(ks["embed"], cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "dec_norm": nn.layernorm_init(cfg.d_model, dtype),
+        "lm_head": nn.dense_init(ks["head"], cfg.d_model, cfg.vocab_padded, dtype),
+    }
+
+
+def _scan(body, stack, x, remat):
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+
+    def step(c, lp):
+        return fn(lp, c), None
+
+    x, _ = jax.lax.scan(step, x, stack)
+    return x
+
+
+def encdec_encode(p, frames, cfg):
+    """frames: (B, T, d_model) stub embeddings -> encoder states."""
+    remat = cfg.remat == "block"
+    B, T, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + nn.sinusoidal_positions(T, d).astype(
+        jnp.dtype(cfg.dtype)
+    )
+
+    def body(lp, h):
+        hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
+        h = h + attn.gqa_forward(lp["attn"], hh, cfg, causal=False, rope=False)
+        hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        return h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+
+    x = _scan(body, p["enc_layers"], x, remat)
+    return nn.layernorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward_features(p, batch, cfg):
+    """Teacher-forced trunk.  batch: frames (B,T,d), tokens (B,S)."""
+    enc_out = encdec_encode(p, batch["frames"], cfg)
+    remat = cfg.remat == "block"
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.embed_lookup(p["embed"], tokens) + nn.sinusoidal_positions(S, cfg.d_model)[
+        None
+    ].astype(dtype)
+
+    def body(lp, h):
+        hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
+        h = h + attn.gqa_forward(lp["attn"], hh, cfg, causal=True, rope=False)
+        hh = nn.layernorm(lp["cross_norm"], h, cfg.norm_eps)
+        kv = attn.cross_attn_kv(lp["cross"], enc_out, cfg)
+        h = h + attn.cross_attn(lp["cross"], hh, kv, cfg)
+        hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        return h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+
+    x = _scan(body, p["dec_layers"], x, remat)
+    return nn.layernorm(p["dec_norm"], x, cfg.norm_eps), 0.0
+
+
+def encdec_head_apply(p, x, cfg):
+    logits = nn.dense(p["lm_head"], x, use_pallas=cfg.use_pallas).astype(jnp.float32)
+    spec = ("batch",) + (None,) * (x.ndim - 2) + ("tp_vocab",)
+    return maybe_constrain(logits, spec)
+
+
+def encdec_forward(p, batch, cfg):
+    x, aux = encdec_forward_features(p, batch, cfg)
+    return encdec_head_apply(p, x, cfg), aux
+
+
+def encdec_init_cache(cfg, batch_size: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    H, hd, T = cfg.n_heads, cfg.head_dim, cfg.n_audio_frames
+    self_c = attn.gqa_init_cache(cfg, batch_size, max_len, dtype)
+    return {
+        "self": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), self_c
+        ),
+        "cross_kv": {
+            "k": jnp.zeros((L, batch_size, T, H, hd), dtype),
+            "v": jnp.zeros((L, batch_size, T, H, hd), dtype),
+        },
+    }
+
+
+def encdec_prefill(p, batch, cfg, max_len: int):
+    """Encode frames + run the decoder prompt, building both caches."""
+    enc_out = encdec_encode(p, batch["frames"], cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.embed_lookup(p["embed"], tokens) + nn.sinusoidal_positions(S, cfg.d_model)[
+        None
+    ].astype(dtype)
+    remat = cfg.remat == "block"
+
+    def body(lp, h):
+        hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, kv = attn.gqa_forward(
+            lp["attn"], hh, cfg, causal=True, rope=False, return_cache=True
+        )
+        h = h + a
+        hh = nn.layernorm(lp["cross_norm"], h, cfg.norm_eps)
+        ckv = attn.cross_attn_kv(lp["cross"], enc_out, cfg)
+        h = h + attn.cross_attn(lp["cross"], hh, ckv, cfg)
+        hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        h = h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+        k, v = kv
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return h, {
+            "self": {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)},
+            "cross_kv": {"k": ckv[0], "v": ckv[1]},
+        }
+
+    fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+
+    def step(c, lp):
+        h, cc = fn(lp, c)
+        return h, cc
+
+    x, cache = jax.lax.scan(step, x, p["dec_layers"])
+    x = nn.layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = nn.dense(p["lm_head"], x[:, -1:]).astype(jnp.float32)[:, 0]
+    return logits, cache
+
+
+def encdec_decode_step(p, cache, tokens, pos, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    pe = nn.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model)
+    x = nn.embed_lookup(p["embed"], tokens) + jax.lax.dynamic_slice_in_dim(
+        pe, pos, 1, axis=0
+    )[None].astype(dtype)
+
+    def step(carry, inp):
+        lp, c = inp
+        h = carry
+        hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, c_self = attn.gqa_decode(lp["attn"], hh, c["self"], pos, cfg)
+        h = h + a
+        hh = nn.layernorm(lp["cross_norm"], h, cfg.norm_eps)
+        kv = (c["cross_kv"]["k"], c["cross_kv"]["v"])
+        h = h + attn.cross_attn(lp["cross"], hh, kv, cfg)
+        hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
+        h = h + _ffn(lp["mlp"], hh)
+        return h, {"self": c_self, "cross_kv": c["cross_kv"]}
+
+    x, new_cache = jax.lax.scan(step, x, (p["dec_layers"], cache))
+    x = nn.layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = nn.dense(p["lm_head"], x).astype(jnp.float32)[:, 0]
+    return logits, new_cache

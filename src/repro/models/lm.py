@@ -1,0 +1,677 @@
+"""Unified decoder-only LM covering dense / moe / vlm / hybrid / ssm families.
+
+Homogeneous layer stacks are lax.scan'd over stacked params (compile time and
+HLO size are O(1) in depth — mandatory for the 80-layer qwen2-72b dry-run).
+Heterogeneous interleavings are expressed as scans over "super-blocks":
+  * vlm   — scan over groups of (cross_attn_every-1 self blocks + 1 cross block)
+  * hybrid— python segments of scanned mamba blocks + one SHARED attn block
+Remat ("block" policy) checkpoints each scanned block body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.sharding.rules import maybe_constrain
+
+__all__ = [
+    "lm_init",
+    "lm_forward",
+    "lm_init_cache",
+    "lm_prefill",
+    "lm_decode_step",
+]
+
+
+# --------------------------------------------------------------------------- #
+# per-layer blocks
+# --------------------------------------------------------------------------- #
+def _block_init(key, cfg, dtype, *, layer_kind: str):
+    ks = nn.split_key_tree(key, ["attn", "mlp"])
+    p = {}
+    if layer_kind == "mamba":
+        p["ssm_in_norm"] = nn.rmsnorm_init(cfg.d_model, dtype)
+        p["mamba"] = ssm_mod.mamba2_init(ks["attn"], cfg, dtype)
+        return p
+    p["attn_norm"] = nn.rmsnorm_init(cfg.d_model, dtype)
+    if layer_kind == "mla":
+        p["attn"] = attn.mla_init(ks["attn"], cfg, dtype)
+    elif layer_kind == "cross":
+        p["cross"] = attn.cross_attn_init(ks["attn"], cfg, dtype)
+    else:
+        p["attn"] = attn.gqa_init(ks["attn"], cfg, dtype)
+    p["mlp_norm"] = nn.rmsnorm_init(cfg.d_model, dtype)
+    if layer_kind == "moe":
+        p["moe"] = moe_mod.moe_init(ks["mlp"], cfg, dtype)
+    else:
+        f = cfg.dense_d_ff if (layer_kind == "dense_ffn" and cfg.dense_d_ff) else cfg.d_ff
+        p["mlp"] = moe_mod.ffn_init(ks["mlp"], cfg.d_model, f, dtype)
+    return p
+
+
+def _self_block(p, x, cfg, *, positions, mla: bool, use_moe: bool):
+    h = nn.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    if mla:
+        a = attn.mla_forward(p["attn"], h, cfg, positions=positions)
+    else:
+        a = attn.gqa_forward(p["attn"], h, cfg, positions=positions)
+    x = x + a
+    h = nn.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    if use_moe:
+        m, aux = moe_mod.moe_forward(p["moe"], h, cfg)
+    else:
+        m, aux = moe_mod.ffn_forward(p["mlp"], h, use_pallas=cfg.use_pallas), 0.0
+    return x + m, aux
+
+
+def _cross_block(p, x, img_kv, cfg):
+    h = nn.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+    x = x + attn.cross_attn(p["cross"], h, img_kv, cfg)
+    h = nn.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+    return x + moe_mod.ffn_forward(p["mlp"], h, use_pallas=cfg.use_pallas)
+
+
+def _mamba_block(p, x, cfg):
+    h = nn.rmsnorm(p["ssm_in_norm"], x, cfg.norm_eps)
+    return x + ssm_mod.mamba2_forward(p["mamba"], h, cfg)
+
+
+def _stacked_init(key, cfg, dtype, n, *, layer_kind):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, dtype, layer_kind=layer_kind))(keys)
+
+
+def _scan_blocks(body, params_stack, x, *, remat: bool, group: int = 1, extra=()):
+    """body(layer_params, x, extra) -> (x, aux).  ``extra`` threads captured
+    traced arrays (e.g. VLM image embeddings) through the custom_vjp
+    explicitly — custom_vjp functions must not close over tracers."""
+    # Manual activation checkpointing: jax.checkpoint-inside-scan lets the
+    # compiler choose what to stack for backward, and XLA's convert-hoisting
+    # turns the bf16 residual stack into fp32 (3x memory on the dominant
+    # training buffer).  This custom_vjp owns the schedule: the forward scan
+    # emits exactly ONE bf16 residual per ``group`` layers (the block input),
+    # and the backward scan re-runs each block under jax.vjp in reverse.
+
+    def constrained(h):
+        # Sequence-parallel residual: shard the carry's seq axis over
+        # "model" — bounds checkpoint memory for the 32k/4k train cells.
+        return maybe_constrain(h, ("batch", "seq", None))
+
+    if not remat:
+        def step(carry, lp):
+            x, aux = carry
+            x, a = body(lp, constrained(x), extra)
+            return (x, aux + jnp.asarray(a, jnp.float32)), None
+
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0)), params_stack)
+        return x, aux
+
+    L = jax.tree_util.tree_leaves(params_stack)[0].shape[0]
+    g = max(1, min(group, L))
+    while L % g:
+        g -= 1
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((L // g, g) + a.shape[1:]), params_stack
+    )
+
+    def group_apply(gp, h, ex):
+        def inner(carry, lp):
+            h, aux = carry
+            h, a = body(lp, constrained(h), ex)
+            return (h, aux + jnp.asarray(a, jnp.float32)), None
+
+        (h, aux), _ = jax.lax.scan(inner, (h, jnp.float32(0)), gp)
+        return h, aux
+
+    def fwd_scan(gstack, x0, ex):
+        def step(carry, gp):
+            x, aux = carry
+            x_in = constrained(x)
+            x2, a = group_apply(gp, x_in, ex)
+            return (x2, aux + a), x_in  # residual: one bf16 carry per group
+
+        (xL, aux), xs = jax.lax.scan(step, (x0, jnp.float32(0)), gstack)
+        return xL, aux, xs
+
+    @jax.custom_vjp
+    def run(gstack, x0, ex):
+        xL, aux, _ = fwd_scan(gstack, x0, ex)
+        return xL, aux
+
+    def run_fwd(gstack, x0, ex):
+        xL, aux, xs = fwd_scan(gstack, x0, ex)
+        return (xL, aux), (gstack, xs, ex)
+
+    def run_bwd(res, ct):
+        gstack, xs, ex = res
+        d_xL, d_aux = ct
+        d_aux = jnp.asarray(d_aux, jnp.float32)
+        d_ex0 = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), ex
+        )
+
+        def bstep(carry, inp):
+            dx, dex = carry
+            gp, x_in = inp
+            x_in = jax.lax.optimization_barrier(x_in)
+            _, vjp_fn = jax.vjp(group_apply, gp, x_in, ex)
+            dgp, dxin, dex_i = vjp_fn((dx, d_aux))
+            dex = jax.tree_util.tree_map(
+                lambda acc, g: acc + g.astype(jnp.float32), dex, dex_i
+            )
+            return (dxin, dex), dgp
+
+        (dx0, dex), dgs = jax.lax.scan(bstep, (d_xL, d_ex0), (gstack, xs), reverse=True)
+        dex = jax.tree_util.tree_map(lambda a, e: a.astype(e.dtype), dex, ex)
+        return dgs, dx0, dex
+
+    run.defvjp(run_fwd, run_bwd)
+    xL, aux = run(grouped, x, extra)
+    return xL, aux
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def lm_init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = nn.split_key_tree(key, ["embed", "layers", "head", "shared", "dense0"])
+    p = {
+        "embed": nn.embed_init(ks["embed"], cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(ks["head"], cfg.d_model, cfg.vocab_padded, dtype)
+
+    fam = cfg.family
+    if fam in ("dense",):
+        p["layers"] = _stacked_init(ks["layers"], cfg, dtype, cfg.n_layers, layer_kind="gqa")
+    elif fam == "moe":
+        kind = "mla" if cfg.kv_lora_rank else "gqa"
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        if cfg.first_dense_layers:
+            p["dense_layers"] = _stacked_init(
+                ks["dense0"], cfg, dtype, cfg.first_dense_layers, layer_kind="dense_ffn"
+            )
+            # replace the attn sub-init to match the moe stack's attention kind
+            if kind == "mla":
+                keys = jax.random.split(ks["dense0"], cfg.first_dense_layers)
+                p["dense_layers"]["attn"] = jax.vmap(
+                    lambda k: attn.mla_init(k, cfg, dtype)
+                )(keys)
+        p["layers"] = _stacked_init(ks["layers"], cfg, dtype, n_moe, layer_kind="moe")
+        if kind == "mla":
+            keys = jax.random.split(ks["shared"], n_moe)
+            p["layers"]["attn"] = jax.vmap(lambda k: attn.mla_init(k, cfg, dtype))(keys)
+    elif fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        kg = jax.random.split(ks["layers"], n_groups)
+
+        def group_init(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "self": _stacked_init(k1, cfg, dtype, n_self, layer_kind="gqa"),
+                "cross": _block_init(k2, cfg, dtype, layer_kind="cross"),
+            }
+
+        p["layers"] = jax.vmap(group_init)(kg)
+    elif fam == "hybrid":
+        p["layers"] = _stacked_init(ks["layers"], cfg, dtype, cfg.n_layers, layer_kind="mamba")
+        p["shared_attn"] = _block_init(ks["shared"], cfg, dtype, layer_kind="gqa")
+    elif fam == "ssm":
+        p["layers"] = _stacked_init(ks["layers"], cfg, dtype, cfg.n_layers, layer_kind="mamba")
+    else:
+        raise ValueError(f"lm_init: unsupported family {fam}")
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill trunk)
+# --------------------------------------------------------------------------- #
+def _trunk(p, x, cfg, batch, positions):
+    """Embedded activations -> final hidden states.  Returns (x, aux)."""
+    remat = cfg.remat == "block"
+    fam = cfg.family
+    aux = 0.0
+    if fam in ("dense",):
+        body = lambda lp, h, _: _self_block(lp, h, cfg, positions=positions, mla=False, use_moe=False)
+        x, aux = _scan_blocks(body, p["layers"], x, remat=remat, group=cfg.remat_group)
+    elif fam == "moe":
+        mla = bool(cfg.kv_lora_rank)
+        if "dense_layers" in p:
+            body0 = lambda lp, h, _: _self_block(
+                lp, h, cfg, positions=positions, mla=mla, use_moe=False
+            )
+            x, a0 = _scan_blocks(body0, p["dense_layers"], x, remat=remat)
+            aux += a0
+        body = lambda lp, h, _: _self_block(lp, h, cfg, positions=positions, mla=mla, use_moe=True)
+        x, a1 = _scan_blocks(body, p["layers"], x, remat=remat, group=cfg.remat_group)
+        aux += a1
+    elif fam == "vlm":
+        img = batch["image_embed"].astype(x.dtype)
+
+        def group_body(gp, h, img_ex):
+            body = lambda lp, hh, _: _self_block(
+                lp, hh, cfg, positions=positions, mla=False, use_moe=False
+            )
+            # inner stack un-remated: the outer super-block checkpoint covers it
+            h, a = _scan_blocks(body, gp["self"], h, remat=False)
+            kv = attn.cross_attn_kv(gp["cross"]["cross"], img_ex, cfg)
+            h = _cross_block(gp["cross"], h, kv, cfg)
+            return h, a
+
+        x, aux = _scan_blocks(group_body, p["layers"], x, remat=remat, extra=img)
+    elif fam in ("hybrid", "ssm"):
+        body = lambda lp, h, _: (_mamba_block(lp, h, cfg), 0.0)
+        if fam == "ssm":
+            x, aux = _scan_blocks(body, p["layers"], x, remat=remat, group=cfg.remat_group)
+        else:
+            # zamba2: segments of mamba blocks + tied shared attention block
+            segs = _hybrid_segments(cfg)
+            off = 0
+            for seg_len, with_attn in segs:
+                seg_params = jax.tree_util.tree_map(
+                    lambda a: jax.lax.slice_in_dim(a, off, off + seg_len, axis=0),
+                    p["layers"],
+                )
+                x, _ = _scan_blocks(body, seg_params, x, remat=remat, group=cfg.remat_group)
+                off += seg_len
+                if with_attn:
+                    x, _ = _self_block(
+                        p["shared_attn"], x, cfg, positions=positions, mla=False, use_moe=False
+                    )
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def _hybrid_segments(cfg):
+    """[(n_mamba_layers, apply_shared_attn_after)] covering n_layers.  The
+    tied attention block fires after every full ``attn_every`` mamba segment
+    (zamba2-38L/6 -> 6 applications; the trailing partial segment gets none)."""
+    segs, done = [], 0
+    while done < cfg.n_layers:
+        n = min(cfg.attn_every, cfg.n_layers - done)
+        done += n
+        segs.append((n, n == cfg.attn_every))
+    return segs
+
+
+def _logits(p, x, cfg):
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    if isinstance(head, dict):  # compressed lm_head
+        logits = nn.dense(head, x, use_pallas=cfg.use_pallas)
+    else:
+        logits = jnp.matmul(x, head, preferred_element_type=jnp.float32)
+    spec = ("batch",) + (None,) * (x.ndim - 2) + ("tp_vocab",)
+    logits = maybe_constrain(logits, spec)
+    return logits.astype(jnp.float32)
+
+
+def lm_forward(p, batch, cfg):
+    """batch['tokens']: (B, S) -> (logits fp32 (B,S,Vp), aux_loss)."""
+    x, aux = lm_forward_features(p, batch, cfg)
+    return _logits(p, x, cfg), aux
+
+
+def lm_forward_features(p, batch, cfg):
+    """Trunk only: final-norm hidden states (B, S, d).  The chunked-loss
+    training path applies the LM head per token chunk (never materializing
+    the full fp32 logits — see train_step.chunked_softmax_xent)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.embed_lookup(p["embed"], tokens)
+    x = maybe_constrain(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, aux = _trunk(p, x, cfg, batch, positions)
+    x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def lm_head_apply(p, x, cfg):
+    return _logits(p, x, cfg)
+
+
+# --------------------------------------------------------------------------- #
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------- #
+def _layer_cache_init(cfg, batch, max_len, dtype, *, layer_kind):
+    if layer_kind == "mamba":
+        return ssm_mod.mamba2_init_cache(cfg, batch, dtype)
+    if layer_kind == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    return attn.gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+def lm_init_cache(cfg, batch_size: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+
+    def stack(n, kind):
+        one = _layer_cache_init(cfg, batch_size, max_len, dtype, layer_kind=kind)
+        return jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    if fam == "dense":
+        return {"layers": stack(cfg.n_layers, "gqa")}
+    if fam == "moe":
+        kind = "mla" if cfg.kv_lora_rank else "gqa"
+        c = {"layers": stack(cfg.n_layers - cfg.first_dense_layers, kind)}
+        if cfg.first_dense_layers:
+            c["dense_layers"] = stack(cfg.first_dense_layers, kind)
+        return c
+    if fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        return {
+            "layers": stack_groups_vlm(cfg, batch_size, max_len, dtype, n_groups),
+        }
+    if fam == "hybrid":
+        n_apps = len([s for s in _hybrid_segments(cfg) if s[1]])
+        return {
+            "layers": stack(cfg.n_layers, "mamba"),
+            "shared_attn": stack(n_apps, "gqa"),
+        }
+    if fam == "ssm":
+        return {"layers": stack(cfg.n_layers, "mamba")}
+    raise ValueError(fam)
+
+
+def stack_groups_vlm(cfg, batch_size, max_len, dtype, n_groups):
+    n_self = cfg.cross_attn_every - 1
+    one_self = attn.gqa_init_cache(cfg, batch_size, max_len, dtype)
+    self_stack = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n_groups, n_self) + a.shape).copy(), one_self
+    )
+    H, hd, T = cfg.n_heads, cfg.head_dim, cfg.n_image_tokens
+    cross_kv = {
+        "k": jnp.zeros((n_groups, batch_size, T, H, hd), dtype),
+        "v": jnp.zeros((n_groups, batch_size, T, H, hd), dtype),
+    }
+    return {"self": self_stack, "cross_kv": cross_kv}
+
+
+def _hybrid_shared_positions(cfg):
+    return [i for i, s in enumerate(_hybrid_segments(cfg)) if s[1]]
+
+
+def lm_prefill(p, batch, cfg, max_len: int):
+    """Run the prompt through the model, building the decode cache.
+
+    Returns (last_token_logits (B, Vp), cache).  Implemented as forward with
+    per-layer cache capture; scan layers capture stacked caches.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = nn.embed_lookup(p["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    fam = cfg.family
+    remat = cfg.remat == "block"
+    dtype = jnp.dtype(cfg.dtype)
+
+    def pad_kv(kv):
+        """Right-pad prefill K/V (B,S,KV,hd) to max_len slots."""
+        k, v = kv
+        Sc = k.shape[1]
+        tgt = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        if Sc < tgt:
+            pad = [(0, 0), (0, tgt - Sc), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k, "v": v}
+
+    cache = {}
+    aux_positions = positions
+
+    def gqa_body(lp, h):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, kv = attn.gqa_forward(lp["attn"], hh, cfg, positions=aux_positions, return_cache=True)
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        h = h + moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+        return h, pad_kv(kv)
+
+    def mla_body(lp, h, *, use_moe):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, (c_kv, k_rope) = attn.mla_forward(
+            lp["attn"], hh, cfg, positions=aux_positions, return_cache=True
+        )
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        if use_moe:
+            m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
+        else:
+            m = moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+        h = h + m
+        pad = [(0, 0), (0, max_len - S), (0, 0)]
+        return h, {"c_kv": jnp.pad(c_kv, pad), "k_rope": jnp.pad(k_rope, pad)}
+
+    def moe_gqa_body(lp, h):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, kv = attn.gqa_forward(lp["attn"], hh, cfg, positions=aux_positions, return_cache=True)
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
+        return h + m, pad_kv(kv)
+
+    def mamba_body(lp, h):
+        hh = nn.rmsnorm(lp["ssm_in_norm"], h, cfg.norm_eps)
+        o, c = ssm_mod.mamba2_forward(lp["mamba"], hh, cfg, return_cache=True)
+        return h + o, c
+
+    def scan_with_cache(body, stack, h):
+        fn = jax.checkpoint(body, prevent_cse=True) if remat else body
+
+        def step(carry, lp):
+            carry = maybe_constrain(carry, ("batch", "seq", None))
+            h2, c = fn(lp, carry)
+            return h2, c
+
+        return jax.lax.scan(step, h, stack)
+
+    if fam == "dense":
+        x, kvs = scan_with_cache(gqa_body, p["layers"], x)
+        cache = {"layers": kvs}
+    elif fam == "moe":
+        mla = bool(cfg.kv_lora_rank)
+        body = (lambda lp, h: mla_body(lp, h, use_moe=True)) if mla else moe_gqa_body
+        cache = {}
+        if "dense_layers" in p:
+            dbody = (
+                (lambda lp, h: mla_body(lp, h, use_moe=False))
+                if mla
+                else gqa_body
+            )
+            x, c0 = scan_with_cache(dbody, p["dense_layers"], x)
+            cache["dense_layers"] = c0
+        x, kvs = scan_with_cache(body, p["layers"], x)
+        cache["layers"] = kvs
+    elif fam == "vlm":
+        img = batch["image_embed"].astype(x.dtype)
+
+        def group_body(gp, h):
+            h, selfc = scan_with_cache(gqa_body, gp["self"], h)
+            kv = attn.cross_attn_kv(gp["cross"]["cross"], img, cfg)
+            h = _cross_block(gp["cross"], h, kv, cfg)
+            return h, {"self": selfc, "cross_kv": {"k": kv[0], "v": kv[1]}}
+
+        x, gc = scan_with_cache(group_body, p["layers"], x)
+        cache = {"layers": gc}
+    elif fam in ("hybrid", "ssm"):
+        if fam == "ssm":
+            x, cs = scan_with_cache(mamba_body, p["layers"], x)
+            cache = {"layers": cs}
+        else:
+            segs = _hybrid_segments(cfg)
+            off, seg_caches, shared_caches = 0, [], []
+            for seg_len, with_attn in segs:
+                seg_params = jax.tree_util.tree_map(
+                    lambda a: jax.lax.slice_in_dim(a, off, off + seg_len, axis=0),
+                    p["layers"],
+                )
+                x, c = scan_with_cache(mamba_body, seg_params, x)
+                seg_caches.append(c)
+                off += seg_len
+                if with_attn:
+                    hh = nn.rmsnorm(p["shared_attn"]["attn_norm"], x, cfg.norm_eps)
+                    a, kv = attn.gqa_forward(
+                        p["shared_attn"]["attn"],
+                        hh,
+                        cfg,
+                        positions=aux_positions,
+                        return_cache=True,
+                    )
+                    x = x + a
+                    hh = nn.rmsnorm(p["shared_attn"]["mlp_norm"], x, cfg.norm_eps)
+                    x = x + moe_mod.ffn_forward(p["shared_attn"]["mlp"], hh)
+                    # zamba2 detail: the shared block's weights are tied but
+                    # its KV cache differs per application point.
+                    shared_caches.append(pad_kv(kv))
+            cache = {
+                "layers": jax.tree_util.tree_map(
+                    lambda *cs: jnp.concatenate(cs, axis=0), *seg_caches
+                ),
+                "shared_attn": jax.tree_util.tree_map(
+                    lambda *cs: jnp.stack(cs, axis=0), *shared_caches
+                ),
+            }
+    else:
+        raise ValueError(fam)
+
+    x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = _logits(p, last, cfg)[:, 0]
+    return logits, cache
+
+
+def lm_decode_step(p, cache, tokens, pos, cfg):
+    """tokens: (B, 1) int32; pos: scalar.  Returns (logits (B,Vp), cache)."""
+    B = tokens.shape[0]
+    x = nn.embed_lookup(p["embed"], tokens)
+    fam = cfg.family
+
+    def gqa_step(lp, h, c):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        return h + moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas), c2
+
+    def moe_step(lp, h, c, *, mla):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        if mla:
+            a, c2 = attn.mla_decode(lp["attn"], hh, c, pos, cfg)
+        else:
+            a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        if "moe" in lp:
+            m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
+        else:
+            m = moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+        return h + m, c2
+
+    def mamba_step(lp, h, c):
+        hh = nn.rmsnorm(lp["ssm_in_norm"], h, cfg.norm_eps)
+        o, c2 = ssm_mod.mamba2_decode(lp["mamba"], hh, c, cfg)
+        return h + o, c2
+
+    def scan_steps(step, stack, caches, h):
+        """Scan layers with the cache stack as CARRY, updated in place via
+        dynamic_update_index.
+
+        Perf log (EXPERIMENTS.md §Perf): both this and the xs/ys formulation
+        were measured.  Byte traffic is equivalent (the residual full-stack
+        copies in the CPU-lowered HLO come from dot-layout/convert
+        rewrites, not the scan form), but the carry form peaks ~40% lower
+        HBM (11.8 vs 19.3 GiB/chip on qwen2-72b decode_32k) because the
+        while-loop carry aliases in place while xs/ys double-buffers."""
+        n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+
+        def body(carry, inp):
+            h, cs = carry
+            lp, i = inp
+            c = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), cs
+            )
+            h2, c2 = step(lp, h, c)
+            cs2 = jax.tree_util.tree_map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, i, axis=0),
+                cs,
+                c2,
+            )
+            return (h2, cs2), None
+
+        (h, caches), _ = jax.lax.scan(body, (h, caches), (stack, jnp.arange(n)))
+        return h, caches
+
+    new_cache = dict(cache)
+    if fam == "dense":
+        x, c = scan_steps(gqa_step, p["layers"], cache["layers"], x)
+        new_cache["layers"] = c
+    elif fam == "moe":
+        mla = bool(cfg.kv_lora_rank)
+        if "dense_layers" in p:
+            x, c0 = scan_steps(
+                lambda lp, h, c: moe_step(lp, h, c, mla=mla),
+                p["dense_layers"],
+                cache["dense_layers"],
+                x,
+            )
+            new_cache["dense_layers"] = c0
+        x, c = scan_steps(
+            lambda lp, h, c: moe_step(lp, h, c, mla=mla), p["layers"], cache["layers"], x
+        )
+        new_cache["layers"] = c
+    elif fam == "vlm":
+        def group_step(gp, h, gc):
+            h, sc = scan_steps(gqa_step, gp["self"], gc["self"], h)
+            kv = (gc["cross_kv"]["k"], gc["cross_kv"]["v"])
+            h = _cross_block(gp["cross"], h, kv, cfg)
+            return h, {"self": sc, "cross_kv": gc["cross_kv"]}
+
+        x, gc = scan_steps(group_step, p["layers"], cache["layers"], x)
+        new_cache["layers"] = gc
+    elif fam in ("hybrid", "ssm"):
+        if fam == "ssm":
+            x, c = scan_steps(mamba_step, p["layers"], cache["layers"], x)
+            new_cache["layers"] = c
+        else:
+            segs = _hybrid_segments(cfg)
+            off, shared_i = 0, 0
+            seg_caches = []
+            shared_cache = cache["shared_attn"]
+            new_shared = []
+            for seg_len, with_attn in segs:
+                sl = lambda a: jax.lax.slice_in_dim(a, off, off + seg_len, axis=0)
+                seg_params = jax.tree_util.tree_map(sl, p["layers"])
+                seg_cache = jax.tree_util.tree_map(sl, cache["layers"])
+                x, c = scan_steps(mamba_step, seg_params, seg_cache, x)
+                seg_caches.append(c)
+                off += seg_len
+                if with_attn:
+                    sc = jax.tree_util.tree_map(lambda a: a[shared_i], shared_cache)
+                    hh = nn.rmsnorm(p["shared_attn"]["attn_norm"], x, cfg.norm_eps)
+                    a, sc2 = attn.gqa_decode(p["shared_attn"]["attn"], hh, sc, pos, cfg)
+                    x = x + a
+                    hh = nn.rmsnorm(p["shared_attn"]["mlp_norm"], x, cfg.norm_eps)
+                    x = x + moe_mod.ffn_forward(p["shared_attn"]["mlp"], hh)
+                    new_shared.append(sc2)
+                    shared_i += 1
+            new_cache["layers"] = jax.tree_util.tree_map(
+                lambda *cs: jnp.concatenate(cs, axis=0), *seg_caches
+            )
+            new_cache["shared_attn"] = jax.tree_util.tree_map(
+                lambda *cs: jnp.stack(cs, axis=0), *new_shared
+            )
+    else:
+        raise ValueError(fam)
+
+    x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = _logits(p, x, cfg)[:, 0]
+    return logits, new_cache

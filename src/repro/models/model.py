@@ -1,0 +1,141 @@
+"""Model dispatch: one API over all ten architectures.
+
+``build_model(cfg)`` returns a :class:`ModelApi` of pure functions; the
+launcher, trainer, server, dry-run, compression CLI and tests all go through
+this interface, so RSI-compressed parameter trees work everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_mod
+from repro.models import encdec as ed_mod
+
+__all__ = ["ModelApi", "build_model", "analytic_param_count", "batch_spec_template"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[[Any, dict], tuple]  # (params, batch) -> (logits, aux)
+    init_cache: Callable[[int, int], Any]  # (batch, max_len) -> cache
+    prefill: Callable[[Any, dict, int], tuple]  # (params, batch, max_len)
+    decode_step: Callable[[Any, Any, jax.Array, jax.Array], tuple]
+    # chunked-loss training path: trunk features + per-chunk head apply
+    forward_features: Any = None  # (params, batch) -> (feats (B,S,d), aux)
+    head_apply: Any = None  # (params, x) -> logits fp32
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family == "audio":
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: ed_mod.encdec_init(key, cfg),
+            forward=lambda p, b: ed_mod.encdec_forward(p, b, cfg),
+            init_cache=lambda bs, ml: ed_mod.encdec_init_cache(cfg, bs, ml),
+            prefill=lambda p, b, ml: ed_mod.encdec_prefill(p, b, cfg, ml),
+            decode_step=lambda p, c, t, pos: ed_mod.encdec_decode_step(p, c, t, pos, cfg),
+            forward_features=lambda p, b: ed_mod.encdec_forward_features(p, b, cfg),
+            head_apply=lambda p, x: ed_mod.encdec_head_apply(p, x, cfg),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: lm_mod.lm_init(key, cfg),
+        forward=lambda p, b: lm_mod.lm_forward(p, b, cfg),
+        init_cache=lambda bs, ml: lm_mod.lm_init_cache(cfg, bs, ml),
+        prefill=lambda p, b, ml: lm_mod.lm_prefill(p, b, cfg, ml),
+        decode_step=lambda p, c, t, pos: lm_mod.lm_decode_step(p, c, t, pos, cfg),
+        forward_features=lambda p, b: lm_mod.lm_forward_features(p, b, cfg),
+        head_apply=lambda p, x: lm_mod.lm_head_apply(p, x, cfg),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# batch templates (shared by data pipeline + dry-run input_specs)
+# --------------------------------------------------------------------------- #
+def batch_spec_template(cfg: ArchConfig, batch: int, seq: int, *, kind: str) -> dict:
+    """Shapes/dtypes of one batch, as (shape, dtype) tuples."""
+    d = {}
+    if cfg.family == "audio":
+        d["frames"] = ((batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        d["image_embed"] = ((batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if kind == "decode":
+        d["tokens"] = ((batch, 1), jnp.int32)
+    else:
+        d["tokens"] = ((batch, seq), jnp.int32)
+        if kind == "train":
+            d["targets"] = ((batch, seq), jnp.int32)
+    return d
+
+
+# --------------------------------------------------------------------------- #
+# analytic parameter counts (MODEL_FLOPS = 6 * N * tokens)
+# --------------------------------------------------------------------------- #
+def analytic_param_count(cfg: ArchConfig, *, active_only: bool = False) -> int:
+    d, V = cfg.d_model, cfg.vocab_padded
+    n = 0
+    # embeddings (+ head)
+    n += V * d if cfg.tie_embeddings else 2 * V * d
+
+    def attn_params():
+        if cfg.kv_lora_rank:  # MLA
+            lq, lkv = cfg.q_lora_rank, cfg.kv_lora_rank
+            nope, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+            H = cfg.n_heads
+            return (
+                d * lq
+                + lq * H * (nope + rd)
+                + d * (lkv + rd)
+                + lkv * H * (nope + vd)
+                + H * vd * d
+            )
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def ffn_params(f):
+        if cfg.family == "audio":
+            return 2 * d * f
+        return 3 * d * f
+
+    def mamba_params():
+        din, s, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        return 2 * d * din + 2 * d * s + d * nh + din * d
+
+    fam = cfg.family
+    if fam == "dense":
+        n += cfg.n_layers * (attn_params() + ffn_params(cfg.d_ff))
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        n += cfg.n_layers * attn_params()
+        n += cfg.first_dense_layers * ffn_params(cfg.dense_d_ff or cfg.d_ff)
+        experts = cfg.top_k if active_only else cfg.n_experts
+        n += n_moe * (
+            experts * 3 * d * cfg.moe_d_ff
+            + cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+            + d * cfg.n_experts
+        )
+    elif fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self = n_groups * (cfg.cross_attn_every - 1)
+        n += n_self * (attn_params() + ffn_params(cfg.d_ff))
+        Hhd = cfg.n_heads * cfg.head_dim
+        cross = 4 * d * Hhd
+        n += n_groups * (cross + ffn_params(cfg.d_ff))
+    elif fam == "hybrid":
+        n += cfg.n_layers * mamba_params()
+        n += attn_params() + ffn_params(cfg.d_ff)  # shared (counted once)
+    elif fam == "ssm":
+        n += cfg.n_layers * mamba_params()
+    elif fam == "audio":
+        n += cfg.n_encoder_layers * (attn_params() + ffn_params(cfg.d_ff))
+        Hhd = cfg.n_heads * cfg.head_dim
+        n += cfg.n_layers * (attn_params() + 4 * d * Hhd + ffn_params(cfg.d_ff))
+    return n

@@ -1,0 +1,109 @@
+"""Shared pure-JAX model building blocks (no flax).
+
+Params are nested dicts of arrays.  Every linear kernel goes through
+``repro.core.lowrank.apply_linear`` so RSI-compressed (factored) checkpoints
+are drop-in replacements.  All matmuls request fp32 accumulation
+(``preferred_element_type``) — bf16 storage, fp32 MXU accumulate, the TPU
+norm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank import apply_linear
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "layernorm_init",
+    "layernorm",
+    "embed_init",
+    "embed_lookup",
+    "rope_freqs",
+    "apply_rope",
+    "sinusoidal_positions",
+    "swiglu",
+    "split_key_tree",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = (d_in**-0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def dense(p, x, *, use_pallas: bool = False):
+    """x @ W with dense or factored kernels (see core/lowrank.py)."""
+    return apply_linear(p, x, use_pallas=use_pallas)
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * (d**-0.5)).astype(dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies for rotary embeddings (half of head_dim pairs)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotary position embedding.  x: (..., seq, heads, head_dim); positions
+    (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def split_key_tree(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

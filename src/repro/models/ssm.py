@@ -1,0 +1,225 @@
+"""Mamba2 block via SSD (state-space duality), pure JAX.
+
+Chunked SSD algorithm (Dao & Gu 2024): the sequence is split into chunks of
+length Q; within a chunk the recurrence is computed as a masked quadratic
+attention-like product on the MXU; across chunks a (heads, head_dim, state)
+state is carried through a lax.scan.  This is the TPU-native adaptation of
+the CUDA selective-scan kernel: the only sequential loop is over chunks, and
+everything inside a chunk is dense matmuls (see kernels/ssd_scan.py for the
+Pallas version of the inner chunk computation).
+
+Projections are stored SEPARATELY (w_z, w_x, w_B, w_C, w_dt) rather than as
+one fused in_proj: mathematically identical (the conv is depthwise so it
+splits too), but it keeps tensor-parallel sharding clean (no sharded-concat
+slicing) and lets RSI compress each projection independently.
+
+Decode is the O(1)-per-token recurrence with a (width-1) depthwise-conv ring
+buffer and the (nh, hd, state) SSM state as the cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.sharding.rules import maybe_constrain
+
+__all__ = [
+    "mamba2_init",
+    "mamba2_forward",
+    "mamba2_init_cache",
+    "mamba2_decode",
+]
+
+
+def mamba2_init(key, cfg, dtype):
+    d, din, s, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.ssm_conv_width
+    ks = nn.split_key_tree(
+        key, ["w_z", "w_x", "w_B", "w_C", "w_dt", "conv_x", "conv_B", "conv_C", "out"]
+    )
+    p = {
+        "w_z": nn.dense_init(ks["w_z"], d, din, dtype),
+        "w_x": nn.dense_init(ks["w_x"], d, din, dtype),
+        "w_B": nn.dense_init(ks["w_B"], d, s, dtype),
+        "w_C": nn.dense_init(ks["w_C"], d, s, dtype),
+        "w_dt": nn.dense_init(ks["w_dt"], d, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D_param": jnp.ones((nh,), dtype),
+        "conv_x": (jax.random.normal(ks["conv_x"], (w, din)) * w**-0.5).astype(dtype),
+        "conv_B": (jax.random.normal(ks["conv_B"], (w, s)) * w**-0.5).astype(dtype),
+        "conv_C": (jax.random.normal(ks["conv_C"], (w, s)) * w**-0.5).astype(dtype),
+        "ssm_norm": nn.rmsnorm_init(din, dtype),
+        "out_proj": nn.dense_init(ks["out"], din, d, dtype, scale=din**-0.5),
+    }
+    return p
+
+
+def _causal_depthwise_conv(x, w, tail=None):
+    """x: (B, L, ch); w: (width, ch); tail: (B, width-1, ch) left context."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is 4 — unrolled adds, no conv primitive
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _ssd_chunk_scan(xb, dt, B_in, C_in, A, chunk, state0=None):
+    """Chunked SSD.  xb: (B, L, nh, hd) *already dt-scaled*; dt: (B, L, nh);
+    B_in/C_in: (B, L, s); A: (nh,) negative reals.  Returns (y, final_state).
+    """
+    Bsz, L, nh, hd = xb.shape
+    s = B_in.shape[-1]
+    Q = min(chunk, L)
+    while L % Q:
+        Q //= 2
+    Nc = L // Q
+
+    xc = xb.reshape(Bsz, Nc, Q, nh, hd)
+    dtc = dt.reshape(Bsz, Nc, Q, nh)
+    Bc = B_in.reshape(Bsz, Nc, Q, s).astype(jnp.float32)
+    Cc = C_in.reshape(Bsz, Nc, Q, s).astype(jnp.float32)
+
+    da = dtc * A[None, None, None, :]  # (B,Nc,Q,nh), negative
+    lcum = jnp.cumsum(da, axis=2)  # within-chunk cumulative log-decay
+
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, nh, hd, s), jnp.float32)
+
+    def body(state, inp):
+        xq, dq, bq, cq, lq = inp  # (B,Q,nh,hd),(B,Q,nh),(B,Q,s),(B,Q,s),(B,Q,nh)
+        xq32 = xq.astype(jnp.float32)
+        # intra-chunk: M[t,u] = exp(l_t - l_u) (t>=u);  scores = (C_t.B_u) * M
+        cb = jnp.einsum("bts,bus->btu", cq, bq)  # (B,Q,Q)
+        seg = lq[:, :, None, :] - lq[:, None, :, :]  # (B,Q,Q,nh) = l_t - l_u
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        # mask BEFORE exp: the t<u half has seg>0 and would overflow, and a
+        # post-exp where() leaks NaN into the backward pass.
+        m = jnp.exp(jnp.where(tri[None, :, :, None], seg, -1e30))
+        y_intra = jnp.einsum("btu,btuh,buhd->bthd", cb, m, xq32)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bts,bhds,bth->bthd", cq, state, jnp.exp(lq))
+        # state update: decay whole chunk + inject chunk inputs
+        l_last = lq[:, -1:, :]  # (B,1,nh)
+        w_in = jnp.exp(l_last - lq)  # (B,Q,nh): decay from step u to chunk end
+        state_new = state * jnp.exp(l_last)[:, 0, :, None, None] + jnp.einsum(
+            "bus,buh,buhd->bhds", bq, w_in, xq32
+        )
+        return state_new, (y_intra + y_inter).astype(xb.dtype)
+
+    inputs = (
+        xc.swapaxes(0, 1),
+        dtc.swapaxes(0, 1),
+        Bc.swapaxes(0, 1),
+        Cc.swapaxes(0, 1),
+        lcum.swapaxes(0, 1),
+    )
+    state, ys = jax.lax.scan(body, state0, inputs)
+    y = ys.swapaxes(0, 1).reshape(Bsz, L, nh, hd)
+    return y, state
+
+
+def mamba2_forward(p, u, cfg, *, return_cache=False):
+    """u: (B, L, d_model) -> (B, L, d_model)."""
+    B, L, _ = u.shape
+    din, s, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    z = nn.dense(p["w_z"], u, use_pallas=cfg.use_pallas)
+    x_raw = nn.dense(p["w_x"], u, use_pallas=cfg.use_pallas)
+    B_raw = nn.dense(p["w_B"], u)
+    C_raw = nn.dense(p["w_C"], u)
+    dt = jax.nn.softplus(
+        nn.dense(p["w_dt"], u).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,L,nh)
+
+    x = _causal_depthwise_conv(x_raw, p["conv_x"])
+    Bv = _causal_depthwise_conv(B_raw, p["conv_B"])
+    Cv = _causal_depthwise_conv(C_raw, p["conv_C"])
+
+    xh = x.reshape(B, L, nh, hd)
+    xh = maybe_constrain(xh, ("batch", None, "tp", None))
+    xbar = (xh.astype(jnp.float32) * dt[..., None]).astype(xh.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, state = _ssd_chunk_scan(xbar, dt, Bv, Cv, A, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D_param"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, L, din)
+    y = nn.rmsnorm(p["ssm_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
+    out = nn.dense(p["out_proj"], y, use_pallas=cfg.use_pallas)
+    if not return_cache:
+        return out
+    w = cfg.ssm_conv_width
+    cache = {
+        "conv_x": jax.lax.dynamic_slice_in_dim(x_raw, L - (w - 1), w - 1, axis=1),
+        "conv_B": jax.lax.dynamic_slice_in_dim(B_raw, L - (w - 1), w - 1, axis=1),
+        "conv_C": jax.lax.dynamic_slice_in_dim(C_raw, L - (w - 1), w - 1, axis=1),
+        "state": state,
+    }
+    return out, cache
+
+
+def mamba2_init_cache(cfg, batch: int, dtype):
+    din, s, nh, hd, w = (
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.n_ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_conv_width,
+    )
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, din), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, s), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, s), dtype),
+        "state": jnp.zeros((batch, nh, hd, s), jnp.float32),
+    }
+
+
+def mamba2_decode(p, u, cache, cfg):
+    """Single-token recurrence.  u: (B, 1, d_model)."""
+    B = u.shape[0]
+    din, s, nh, hd, w = (
+        cfg.d_inner,
+        cfg.ssm_state,
+        cfg.n_ssm_heads,
+        cfg.ssm_head_dim,
+        cfg.ssm_conv_width,
+    )
+    z = nn.dense(p["w_z"], u)
+    x_raw = nn.dense(p["w_x"], u)
+    B_raw = nn.dense(p["w_B"], u)
+    C_raw = nn.dense(p["w_C"], u)
+    dt = jax.nn.softplus(
+        nn.dense(p["w_dt"], u).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B, nh)
+
+    x = _causal_depthwise_conv(x_raw, p["conv_x"], tail=cache["conv_x"])[:, 0]
+    Bv = _causal_depthwise_conv(B_raw, p["conv_B"], tail=cache["conv_B"])[:, 0]
+    Cv = _causal_depthwise_conv(C_raw, p["conv_C"], tail=cache["conv_C"])[:, 0]
+
+    xh = x.reshape(B, nh, hd).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])  # (B, nh)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bs,bhd,bh->bhds", Bv.astype(jnp.float32), xh, dt
+    )
+    y = jnp.einsum("bs,bhds->bhd", Cv.astype(jnp.float32), state)
+    y = y + xh * p["D_param"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, din).astype(u.dtype)
+    y = nn.rmsnorm(p["ssm_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
+    out = nn.dense(p["out_proj"], y)
+
+    def roll(buf, new):
+        return jnp.concatenate([buf[:, 1:], new], axis=1)
+
+    new_cache = {
+        "conv_x": roll(cache["conv_x"], x_raw),
+        "conv_B": roll(cache["conv_B"], B_raw),
+        "conv_C": roll(cache["conv_C"], C_raw),
+        "state": state,
+    }
+    return out, new_cache

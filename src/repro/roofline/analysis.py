@@ -1,0 +1,173 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    t_compute = HLO_FLOPs   / (PEAK_FLOPS_BF16)        [per-chip]
+    t_memory  = HLO_bytes   / (HBM_BW)                 [per-chip]
+    t_coll    = coll_bytes  / (ICI_LINK_BW * LINKS)    [per-chip]
+
+``compiled.cost_analysis()`` supplies per-chip FLOPs and bytes (the SPMD
+module is per-device).  Collective bytes are NOT in cost_analysis: we parse
+the optimized HLO text and apply ring-transfer formulas per op kind with the
+participant count from replica_groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms", "Roofline"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# "bf16[8,4096,512]{...}" or "(f32[...], f32[...])" result types
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        return group_size
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return world
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-chip collective traffic (ring-transfer bytes) by op kind."""
+
+    by_kind: dict
+    op_count: int
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def parse_collectives(hlo_text: str, *, world: int) -> CollectiveStats:
+    by_kind = {k: 0.0 for k in _COLL_KINDS}
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "<result_type> <op>(" instruction forms, incl. "-start" async
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = op[:-6] if op.endswith("-start") else op
+        if kind not in _COLL_KINDS:
+            continue
+        if op.endswith("-done"):
+            continue
+        n = _group_size(s, world)
+        if n <= 1:
+            continue
+        b = _shape_bytes(result_type)
+        if kind == "all-reduce":
+            moved = 2.0 * (n - 1) / n * b
+        elif kind == "all-gather":
+            moved = (n - 1) / n * b  # b is the gathered (result) size
+        elif kind == "reduce-scatter":
+            moved = (n - 1) * b  # b is the scattered (result) size
+        elif kind == "all-to-all":
+            moved = (n - 1) / n * b
+        else:  # collective-permute
+            moved = float(b)
+        by_kind[kind] += moved
+        count += 1
+    return CollectiveStats(by_kind=by_kind, op_count=count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-chip HLO FLOPs
+    hbm_bytes: float  # per-chip bytes accessed
+    coll_bytes: float  # per-chip collective bytes moved
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_global: float  # 6*N*D analytic
+    chips: int
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/redundancy waste."""
+        hlo_global = self.flops * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization at the bounding term == achievable MFU."""
+        if self.t_total <= 0:
+            return 0.0
+        return (self.model_flops_global / self.chips) / (
+            self.t_total * 197e12
+        )
+
+
+def roofline_terms(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    chips: int,
+    model_flops_global: float,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    ici_bw: float = 50e9 * 2,
+) -> Roofline:
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll_bytes=coll_bytes,
+        t_compute=flops / peak_flops,
+        t_memory=hbm_bytes / hbm_bw,
+        t_collective=coll_bytes / ici_bw,
+        model_flops_global=model_flops_global,
+        chips=chips,
+    )

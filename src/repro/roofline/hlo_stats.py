@@ -1,0 +1,317 @@
+"""Trip-count-aware HLO module analysis.
+
+``compiled.cost_analysis()`` counts each while-loop BODY once — for
+scan-over-layers models that undercounts FLOPs/bytes by the layer count (an
+80-layer qwen2 step would report ~1/80th of its compute).  This module
+parses the optimized HLO text into its computation graph and walks it
+recursively, multiplying while bodies by their trip counts (recovered from
+the loop-condition constant) and counting:
+
+  * flops        — dot/convolution FLOPs from operand shapes + contracting
+                   dims (2*prod(result)*prod(contraction)); elementwise
+                   transcendentals counted at 1 flop/elem (negligible next
+                   to the dots, included for completeness);
+  * hbm_bytes    — Σ per top-level instruction (operand+result bytes).
+                   The module is post-fusion, so fusion internals are NOT
+                   counted — each fusion contributes its boundary traffic,
+                   which is the standard "bytes accessed" HBM model;
+  * collectives  — ring-transfer bytes per op kind (same formulas as
+                   analysis.parse_collectives) with while-multiplication.
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["HloStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "u4": 1, "s4": 1,
+}
+
+_COLL_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# rtype is lazy-`.*?` (NOT [^=]) because tuple types embed `/*index=N*/`
+# comments containing '='; the first `word(` after the '=' is always the op.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_elems_bytes(type_str: str):
+    n_total, b_total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+        b_total += n * _DTYPE_BYTES[dt]
+    return n_total, b_total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLL_KINDS}
+    )
+    coll_ops: int = 0
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in _COLL_KINDS:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+        self.coll_ops += int(other.coll_ops * mult)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+class _Instr:
+    __slots__ = ("name", "rtype", "op", "rest")
+
+    def __init__(self, name, rtype, op, rest):
+        self.name, self.rtype, self.op, self.rest = name, rtype, op, rest
+
+
+def _parse_computations(hlo: str):
+    comps: Dict[str, list] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shapes: Dict[str, str]) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dim sizes)."""
+    _, rb = _shape_elems_bytes(instr.rtype)
+    r_elems, _ = _shape_elems_bytes(instr.rtype)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    ops = [o.strip().lstrip("%") for o in instr.rest.split(")")[0].split(",")[:2]]
+    lhs_type = shapes.get(ops[0], "")
+    dims_m = _SHAPE_RE.search(lhs_type)
+    if not (m and dims_m):
+        return 2.0 * r_elems  # fallback: unknown contraction
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    contract = 1
+    for idx in m.group(1).split(","):
+        if idx != "" and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * r_elems * contract
+
+
+def _group_size(rest: str, world: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return world
+
+
+def _trip_count(cond_instrs, comps=None) -> int:
+    """Trip count from the counted-loop pattern.  The bound is the SCALAR
+    s32 constant in the condition computation (`compare(counter, N)`,
+    possibly wrapped in a fusion); LE adds one.  Non-scalar constants
+    (shape/table data) are ignored — taking any constant over-counts."""
+    best = 0
+    le = False
+    for ins in cond_instrs:
+        if ins.op == "constant" and re.match(r"^[su]\d+\[\]", ins.rtype.strip()):
+            m = re.match(r"\s*(\d+)\s*\)?", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        if "direction=LE" in ins.rest:
+            le = True
+        # compare may live inside a wrapped fusion
+        if comps is not None and ins.op == "fusion":
+            called = _CALL_ATTR_RE.search(ins.rest)
+            if called:
+                for ins2 in comps.get(called.group(1), []):
+                    if "direction=LE" in ins2.rest:
+                        le = True
+    if best == 0:
+        return 1
+    return best + (1 if le else 0)
+
+
+def _slice_effective_bytes(fused_instrs):
+    """{param_index: effective bytes} for fusion params consumed only by
+    dynamic-slice (touches slice-sized data, not the whole buffer)."""
+    params = {}
+    for ins in fused_instrs:
+        if ins.op == "parameter":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+    consumers: Dict[str, list] = {p: [] for p in params}
+    for ins in fused_instrs:
+        if ins.op == "parameter":
+            continue
+        for o in re.findall(r"%([\w.\-]+)", ins.rest.split("metadata")[0]):
+            if o in consumers:
+                consumers[o].append(ins)
+    out = {}
+    for pname, uses in consumers.items():
+        if uses and all(u.op == "dynamic-slice" for u in uses):
+            out[params[pname]] = sum(_shape_elems_bytes(u.rtype)[1] for u in uses)
+    return out
+
+
+# elementwise transcendental ops counted at 1 flop/element
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "exponential", "log", "tanh",
+    "rsqrt", "sqrt", "power", "maximum", "minimum", "compare", "select",
+}
+
+
+def analyze_hlo(hlo: str, *, world: int) -> HloStats:
+    comps = _parse_computations(hlo)
+    cache: Dict[str, HloStats] = {}
+
+    # find entry: computation named like ENTRY (first in file order that is
+    # referenced by no other, fallback "main")
+    referenced = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            for m in _CALL_ATTR_RE.finditer(ins.rest):
+                referenced.add(m.group(1))
+            for m in _COND_ATTR_RE.finditer(ins.rest):
+                referenced.add(m.group(1))
+    entry = None
+    for name in comps:
+        if ("main" in name and name not in referenced) or entry is None and name not in referenced:
+            entry = name
+            if "main" in name:
+                break
+    if entry is None:
+        entry = next(iter(comps))
+
+    def cost(comp_name: str, *, count_bytes: bool) -> HloStats:
+        key = (comp_name, count_bytes)
+        if key in cache:
+            return cache[key]
+        st = HloStats()
+        shapes = {ins.name: ins.rtype for ins in comps.get(comp_name, [])}
+        # parameters also have shapes in rest — add from 'parameter' ops
+        for ins in comps.get(comp_name, []):
+            op = ins.op
+            kind = op[:-6] if op.endswith("-start") else op
+            if kind in _COLL_KINDS and not op.endswith("-done"):
+                n = _group_size(ins.rest, world)
+                _, b = _shape_elems_bytes(ins.rtype)
+                if n > 1:
+                    if kind == "all-reduce":
+                        moved = 2.0 * (n - 1) / n * b
+                    elif kind == "all-gather":
+                        moved = (n - 1) / n * b
+                    elif kind == "reduce-scatter":
+                        moved = (n - 1.0) * b
+                    elif kind == "all-to-all":
+                        moved = (n - 1) / n * b
+                    else:
+                        moved = float(b)
+                    st.coll_bytes[kind] += moved
+                    st.coll_ops += 1
+            if op in ("dot", "convolution"):
+                st.flops += _dot_flops(ins, shapes)
+            elif op in _EW_OPS:
+                n, _ = _shape_elems_bytes(ins.rtype)
+                st.flops += n
+            # ---- bytes: boundary traffic of top-level ops ----
+            if count_bytes and op not in ("parameter", "constant", "tuple", "get-tuple-element", "bitcast"):
+                _, rb = _shape_elems_bytes(ins.rtype)
+                opnd_names = re.findall(r"%([\w.\-]+)", ins.rest.split("metadata")[0])
+                op_bytes = []
+                for opnd in opnd_names:
+                    if opnd in shapes:
+                        op_bytes.append((shapes[opnd], _shape_elems_bytes(shapes[opnd])[1]))
+                if op == "dynamic-slice":
+                    st.hbm_bytes += 2.0 * rb  # read slice + write result
+                elif op in ("fusion", "dynamic-update-slice") and any(
+                    t.split("{")[0] == ins.rtype.split("{")[0] for t, _ in op_bytes
+                ):
+                    # in-place update pattern (DUS / accumulate fusions): the
+                    # buffer-sized operand aliases the result; real traffic is
+                    # the non-aliased operands read + the touched slice write.
+                    other = sum(
+                        b for t, b in op_bytes if t.split("{")[0] != ins.rtype.split("{")[0]
+                    )
+                    st.hbm_bytes += 2.0 * other
+                elif op == "fusion":
+                    # slice-consuming fusions: a param consumed ONLY by
+                    # dynamic-slice inside the fused computation touches the
+                    # slice, not the whole (possibly multi-GB, loop-carried)
+                    # operand buffer.  Operand position i binds parameter(i).
+                    eff = {
+                        i: (_shape_elems_bytes(shapes[nm])[1] if nm in shapes else 0)
+                        for i, nm in enumerate(opnd_names)
+                    }
+                    called = _CALL_ATTR_RE.search(ins.rest)
+                    if called and called.group(1) in comps:
+                        for idx, b in _slice_effective_bytes(comps[called.group(1)]).items():
+                            if idx in eff:
+                                eff[idx] = min(eff[idx], b)
+                    st.hbm_bytes += rb + sum(eff.values())
+                else:
+                    st.hbm_bytes += rb + sum(b for _, b in op_bytes)
+            # ---- recurse ----
+            if op == "while":
+                body = _CALL_ATTR_RE.search(ins.rest)
+                cond = _COND_ATTR_RE.search(ins.rest)
+                trip = _trip_count(comps.get(cond.group(1), []), comps) if cond else 1
+                if body:
+                    st.add(cost(body.group(1), count_bytes=count_bytes), mult=trip)
+            elif op == "fusion":
+                called = _CALL_ATTR_RE.search(ins.rest)
+                if called:
+                    # fusions: count INTERNAL flops, but bytes only at the
+                    # boundary (already added above)
+                    st.add(cost(called.group(1), count_bytes=False))
+            elif op in ("call", "conditional", "custom-call", "async-start"):
+                for m in _CALL_ATTR_RE.finditer(ins.rest):
+                    st.add(cost(m.group(1), count_bytes=count_bytes))
+            elif op in ("reduce", "sort", "scatter", "select-and-scatter", "map"):
+                pass  # applied computations are tiny per-element lambdas
+        cache[key] = st
+        return st
+
+    return cost(entry, count_bytes=True)

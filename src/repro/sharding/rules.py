@@ -1,0 +1,184 @@
+"""Logical-axis sharding rules (MaxText-style, path-regex keyed).
+
+Params are annotated *by path pattern*, not in the model code: a single rule
+table covers all ten architectures because the model zoo uses consistent
+names (wq/wk/wv/wo, w_gate/w_up/w_down, experts/..., w_x/w_B/...).
+
+Logical axis names:
+  fsdp      -> "data"   (ZeRO-3-style parameter sharding)
+  tp        -> "model"  (tensor parallel: heads / d_ff / d_inner)
+  ep        -> "model"  (expert parallel: MoE expert axis)
+  tp_vocab  -> "model"  (vocab-sharded embedding / lm head)
+  batch     -> ("pod", "data")
+  layer     -> None     (lax.scan stacking axis, never sharded)
+
+Every assignment is guarded by divisibility: if a dim is not divisible by the
+product of mesh-axis sizes, the assignment silently drops to replicated (this
+is what makes e.g. mamba2-130m's 24-head dims work on a 16-way model axis).
+
+``maybe_constrain`` gives model code optional activation-sharding hints that
+are no-ops outside an active rule context — so the same model code runs
+single-device (tests) and on the production mesh (dry-run/train).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshRules",
+    "active_rules",
+    "use_rules",
+    "maybe_constrain",
+    "param_specs",
+    "PARAM_RULES",
+]
+
+_state = threading.local()
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    logical: dict = dataclasses.field(
+        default_factory=lambda: {
+            "fsdp": ("data",),
+            "tp": ("model",),
+            "ep": ("model",),
+            "tp_vocab": ("model",),
+            "batch": ("pod", "data"),
+            "seq": (),  # flip to ("model",) for sequence parallelism
+            "layer": (),
+        }
+    )
+
+    def axis_size(self, names: Sequence[str]) -> int:
+        n = 1
+        for a in names:
+            if a in self.mesh.shape:
+                n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, logical_name: Optional[str], dim: int) -> Optional[tuple]:
+        """Mesh axes for one dim, or None if unmapped/non-divisible."""
+        if logical_name is None:
+            return None
+        axes = tuple(a for a in self.logical.get(logical_name, ()) if a in self.mesh.shape)
+        if not axes:
+            return None
+        if dim % self.axis_size(axes) != 0:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec(self, logical_axes: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        return P(*(self.resolve(n, d) for n, d in zip(logical_axes, shape)))
+
+    def sharding(self, logical_axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def active_rules() -> Optional[MeshRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[MeshRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def maybe_constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint if a rule context is active, else identity."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# --------------------------------------------------------------------------- #
+# Parameter rules: (path regex, logical axes for the *trailing* dims).
+# Leading unmatched dims (the lax.scan "layer"/group axes) default to None.
+# First match wins.
+# --------------------------------------------------------------------------- #
+PARAM_RULES: list = [
+    # embeddings / heads
+    (r"(?:^|/)embed(?:/tok)?$", ("tp_vocab", "fsdp")),
+    (r"(?:^|/)pos_embed$", (None, None)),
+    (r"(?:^|/)lm_head$", ("fsdp", "tp_vocab")),
+    # MLA
+    (r"/wq_a$", ("fsdp", None)),
+    (r"/wq_b$", (None, "tp")),
+    (r"/wkv_a$", ("fsdp", None)),
+    (r"/wkv_b$", (None, "tp")),
+    # attention (dense + cross)
+    (r"/w[qkv]$", ("fsdp", "tp")),
+    (r"/wo$", ("tp", "fsdp")),
+    (r"/b[qkv]$", ("tp",)),
+    # MoE
+    (r"/experts/w_(gate|up)$", ("ep", "fsdp", None)),
+    (r"/experts/w_down$", ("ep", None, "fsdp")),
+    (r"/router/gate_w$", ("fsdp", None)),
+    # dense / shared-expert FFN
+    (r"/w_(gate|up)$", ("fsdp", "tp")),
+    (r"/w_down$", ("tp", "fsdp")),
+    # SSM (mamba2)
+    (r"/w_(z|x)$", ("fsdp", "tp")),
+    (r"/w_(B|C)$", ("fsdp", None)),
+    (r"/w_dt$", ("fsdp", None)),
+    (r"/out_proj$", ("tp", "fsdp")),
+    (r"/conv_w$", (None, "tp")),
+    (r"/(A_log|dt_bias|D_param)$", ("tp",)),
+    (r"/ssm_norm/scale$", ("tp",)),
+    # low-rank factors (post-compression trees): A keeps the input-dim rule,
+    # B keeps the output-dim rule, k axis unsharded.  These two generic rules
+    # rely on compress_tree's spec_transform instead when specs are threaded;
+    # they are the fallback for freshly-initialized low-rank params.
+    (r"/a$", ("fsdp", None)),
+    (r"/b$", (None, "tp")),
+    # norms, biases, scalars
+    (r".*", None),  # replicated
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def spec_for(path_str: str, shape: Sequence[int], rules: MeshRules) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path_str):
+            if logical is None:
+                return P()
+            n_lead = len(shape) - len(logical)
+            if n_lead < 0:  # rule longer than shape (e.g. 1-D bias w/ 2-D rule)
+                logical = logical[-len(shape):]
+                n_lead = 0
+            full = (None,) * n_lead + tuple(logical)
+            return rules.spec(full, shape)
+    return P()
+
+
+def param_specs(params: Any, rules: MeshRules) -> Any:
+    """PartitionSpec pytree parallel to a params pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for(_path_str(p), leaf.shape, rules) for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: Any, rules: MeshRules) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), param_specs(params, rules)
+    )

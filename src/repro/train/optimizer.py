@@ -1,0 +1,226 @@
+"""Optimizers from scratch (no optax): AdamW, Adafactor, SGD-momentum.
+
+Minimal optax-like contract: ``Optimizer(init, update)`` over pytrees.
+Adafactor implements factored second moments for >=2-D leaves (row/col
+statistics) — the memory-frugal choice for the 236B-parameter dry-run cells
+(m+v fp32 for 236B is ~1.9 TB; factored stats are ~O((C+D)/CD) of that).
+
+All moment math runs in fp32 regardless of param dtype (bf16-safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgdm",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "linear_schedule",
+    "constant_schedule",
+    "global_norm",
+    "apply_updates",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]  # (grads, state, params, step)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# schedules
+# --------------------------------------------------------------------------- #
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, warmup: int, total: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        decay = jnp.maximum(0.0, (total - s) / max(total - warmup, 1))
+        return lr * jnp.minimum(warm, decay)
+
+    return fn
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+
+    return fn
+
+
+def _wd_mask(params):
+    """Decay matrices only (not norms/biases/scalars) — the standard mask."""
+    return jax.tree_util.tree_map(lambda p: p.ndim >= 2, params)
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+def adamw(
+    lr: Callable,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+        mask = _wd_mask(params)
+
+        def upd(g, m, v, p, decay_ok):
+            g32 = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g32
+            v2 = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m2 / bc1
+            vh = v2 / bc2
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32) * decay_ok
+            return u, m2, v2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        flat_mask = treedef.flatten_up_to(mask)
+        outs = [upd(g, m, v, p, mk) for g, m, v, p, mk in zip(flat_g, flat_m, flat_v, flat_p, flat_mask)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]),
+            "v": jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs]),
+        }
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moments; Shazeer & Stern 2018)
+# --------------------------------------------------------------------------- #
+def adafactor(
+    lr: Callable,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree_util.tree_map(leaf, params, is_leaf=lambda x: hasattr(x, "ndim"))
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t**-decay
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                rhat = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g32 * jax.lax.rsqrt(rhat * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * u
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32) * (p.ndim >= 2)
+            return u, new_s
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_state = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# SGD + momentum
+# --------------------------------------------------------------------------- #
+def sgdm(lr: Callable, *, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+
+        def upd(g, m):
+            g32 = g.astype(jnp.float32)
+            m2 = momentum * m + g32
+            u = -(lr_t * (g32 + momentum * m2)) if nesterov else -(lr_t * m2)
+            return u, m2
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state)
+        outs = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        return (
+            jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]),
+        )
+
+    return Optimizer(init, update)

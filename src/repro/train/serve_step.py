@@ -1,0 +1,92 @@
+"""Serving steps: batched prefill + single-token decode, pjit-shardable.
+
+``serve_step`` (decode) is what the decode_* dry-run cells lower: one new
+token per sequence against a seq_len-deep cache.  Cache sharding follows the
+same rules as activations: batch over ("pod","data") when divisible, heads /
+latent dims over "model".
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import MeshRules, use_rules
+
+__all__ = ["make_prefill_step", "make_decode_step", "cache_specs", "greedy_generate"]
+
+
+def make_prefill_step(model, *, rules: Optional[MeshRules] = None, max_len: int):
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model, *, rules: Optional[MeshRules] = None):
+    def decode_step(params, cache, tokens, pos):
+        with use_rules(rules):
+            return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+def cache_specs(cache, rules: MeshRules):
+    """PartitionSpecs for a decode cache.
+
+    Layout conventions in the model zoo (leading dim = stacked layers):
+      KV caches   (L, B, S, KV, hd)   -> (None, batch, None, tp, None)
+      MLA latents (L, B, S, lora)     -> (None, batch, None, None)
+      SSM state   (L, B, nh, hd, st)  -> (None, batch, tp, None, None)
+      conv tails  (L, B, w-1, ch)     -> (None, batch, None, tp)
+      cross K/V   (G, B, T, H, hd)    -> (None, batch, None, tp, None)
+    Batch sharding is divisibility-guarded (long_500k has B=1 -> replicated).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def leaf_spec(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        shape = leaf.shape
+        if name.endswith("state"):  # (L, B, nh, hd, st) stacked / (B,nh,hd,st)
+            if leaf.ndim == 5:
+                return rules.spec((None, "batch", "tp", None, None), shape)
+            return rules.spec(("batch", "tp", None, None), shape)
+        if name.endswith("conv_x") or name.endswith("conv_B") or name.endswith("conv_C"):
+            return rules.spec((None, "batch", None, "tp"), shape)
+        if leaf.ndim == 6:  # vlm self-KV (G, n_self, B, S, KV, hd)
+            return rules.spec((None, None, "batch", "tp", None, None), shape)
+        if leaf.ndim == 5:
+            if "cross" in name:  # (G/L, B, T_img, H, hd): heads shard fine
+                return rules.spec((None, "batch", None, "tp", None), shape)
+            # KV cache (L, B, S, KV, hd): shard the SEQUENCE over "model" —
+            # flash-decode layout: attention is local per S-shard, softmax
+            # stats all-reduce is O(B*H).  Head sharding would force a full
+            # cache all-gather whenever KV heads < mesh axis (GQA).
+            return rules.spec((None, "batch", "tp", None, None), shape)
+        if leaf.ndim == 4:  # MLA latent (L, B, S, lora): same S-sharding
+            return rules.spec((None, "batch", "tp", None), shape)
+        if leaf.ndim == 3:
+            return rules.spec(("batch", None, None), shape)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat]
+    )
+
+
+def greedy_generate(model, params, batch, *, steps: int, max_len: int):
+    """Reference batched greedy decoding loop (examples/serving)."""
+    logits, cache = model.prefill(params, batch, max_len)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    start = batch["tokens"].shape[1]
+    out = [tok]
+    step_fn = jax.jit(model.decode_step)
+    for i in range(steps - 1):
+        logits, cache = step_fn(params, cache, tok, jnp.int32(start + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

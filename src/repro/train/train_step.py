@@ -1,0 +1,196 @@
+"""Train-step builders: loss, grad, optimizer apply — fully pjit-shardable.
+
+The returned step function has signature
+    train_step(state: TrainState, batch) -> (TrainState, metrics)
+and is pure (jit/lower-able with ShapeDtypeStructs — this is what the
+multi-pod dry-run compiles).  Features:
+
+  * cross-entropy over the PADDED vocab with the padding columns masked,
+    optional z-loss;
+  * MoE auxiliary load-balance loss folded in;
+  * global-norm gradient clipping;
+  * gradient accumulation (lax.scan over microbatches);
+  * activation sharding rules (FSDP/TP/SP) threaded via use_rules so every
+    maybe_constrain in the model zoo becomes a real with_sharding_constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import MeshRules, use_rules, param_specs
+from repro.train import optimizer as opt_mod
+
+__all__ = ["TrainState", "make_train_step", "softmax_xent", "init_train_state", "state_specs"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def softmax_xent(logits, targets, *, real_vocab: int, z_loss: float = 1e-4):
+    """logits fp32 (..., Vp); targets int (...).  Padded vocab masked."""
+    Vp = logits.shape[-1]
+    if real_vocab < Vp:
+        neg = jnp.full((Vp - real_vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., real_vocab:].set(neg)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - gold)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def chunked_softmax_xent(
+    feats,
+    targets,
+    head_apply,
+    *,
+    real_vocab: int,
+    z_loss: float = 1e-4,
+    n_chunks: int = 16,
+):
+    """Head-matmul + cross-entropy fused over sequence chunks.
+
+    The full-batch fp32 logits (tokens x padded-vocab) are the largest
+    single tensor of a training step (e.g. qwen2-72b train_4k: 2.5 GiB/chip
+    saved for backward).  Chunking the head over the sequence and
+    jax.checkpoint-ing each chunk keeps only (B, S/n, Vp) alive and
+    recomputes chunk logits in the backward pass — peak memory drops ~n x
+    for one extra head matmul per chunk.
+    """
+    B, S, d = feats.shape
+    while S % n_chunks:
+        n_chunks //= 2
+    if n_chunks <= 1:
+        return softmax_xent(
+            head_apply(feats), targets, real_vocab=real_vocab, z_loss=z_loss
+        )
+    xf = feats.reshape(B, n_chunks, S // n_chunks, d).swapaxes(0, 1)
+    tf = targets.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    def body(carry, inp):
+        x_c, t_c = inp
+        logits = head_apply(x_c)  # (B, S/n, Vp) fp32
+        Vp = logits.shape[-1]
+        if real_vocab < Vp:
+            neg = jnp.full((Vp - real_vocab,), -1e30, logits.dtype)
+            logits = logits.at[..., real_vocab:].set(neg)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        sl, sz = carry
+        return (sl + jnp.sum(lse - gold), sz + jnp.sum(jnp.square(lse))), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (sl, sz), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xf, tf))
+    n_tok = B * S
+    loss = sl / n_tok
+    if z_loss:
+        loss = loss + z_loss * sz / n_tok
+    return loss
+
+
+def init_train_state(model, optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt_state=optimizer.init(params), step=jnp.zeros((), jnp.int32))
+
+
+def state_specs(state: TrainState, rules: MeshRules) -> TrainState:
+    """PartitionSpec tree for a TrainState: optimizer moments inherit their
+    parameter's spec.  AdamW m/v and SGD momentum mirror the params tree;
+    adafactor's factored stats get the param spec minus the reduced axis."""
+    from jax.sharding import PartitionSpec as P
+
+    p_specs = param_specs(state.params, rules)
+
+    def walk(o, s):
+        if isinstance(o, dict) and set(o) == {"vr", "vc"} and not isinstance(s, dict):
+            parts = tuple(s) if s is not None else ()
+            vr = P(*parts[:-1]) if parts else P()
+            vc = P(*(parts[:-2] + parts[-1:])) if len(parts) >= 2 else P()
+            return {"vr": vr, "vc": vc}
+        if isinstance(o, dict) and set(o) == {"v"} and not isinstance(s, dict):
+            return {"v": s if s is not None else P()}
+        if isinstance(o, dict):
+            if isinstance(s, dict) and set(o) <= set(s):
+                return {k: walk(v, s[k]) for k, v in o.items()}
+            # e.g. adamw's top level {"m": <params tree>, "v": <params tree>}
+            return {k: walk(v, s) for k, v in o.items()}
+        return s if s is not None else P()
+
+    return TrainState(params=p_specs, opt_state=walk(state.opt_state, p_specs), step=P())
+
+
+def make_train_step(
+    model,
+    optimizer: opt_mod.Optimizer,
+    *,
+    rules: Optional[MeshRules] = None,
+    accum_steps: int = 1,
+    max_grad_norm: float = 1.0,
+    aux_weight: float = 0.01,
+    z_loss: float = 1e-4,
+):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        if model.forward_features is not None:
+            feats, aux = model.forward_features(params, batch)
+            loss = chunked_softmax_xent(
+                feats,
+                batch["targets"],
+                lambda x: model.head_apply(params, x),
+                real_vocab=cfg.vocab,
+                z_loss=z_loss,
+            )
+        else:
+            logits, aux = model.forward(params, batch)
+            loss = softmax_xent(
+                logits, batch["targets"], real_vocab=cfg.vocab, z_loss=z_loss
+            )
+        total = loss + aux_weight * jnp.asarray(aux, jnp.float32)
+        return total, (loss, jnp.asarray(aux, jnp.float32))
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            (total, (loss, aux)), grads = grad_fn(params, batch)
+            return grads, loss, aux
+        # microbatch scan: batch dim must divide accum_steps
+        def resh(x):
+            return x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(resh, batch)
+        zeros = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, lsum, asum = carry
+            (total, (loss, aux)), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, lsum + loss, asum + aux), None
+
+        (acc, lsum, asum), _ = jax.lax.scan(body, (zeros, 0.0, 0.0), micro)
+        grads = jax.tree_util.tree_map(lambda a: a / accum_steps, acc)
+        return grads, lsum / accum_steps, asum / accum_steps
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules):
+            grads, loss, aux = compute_grads(state.params, batch)
+            grads, gnorm = opt_mod.clip_by_global_norm(grads, max_grad_norm)
+            updates, opt_state = optimizer.update(grads, state.opt_state, state.params, state.step)
+            params = opt_mod.apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state, step=state.step + 1)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step

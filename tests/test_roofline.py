@@ -1,0 +1,100 @@
+"""Unit tests for the trip-count-aware HLO analyzer (§Roofline foundation)."""
+
+import numpy as np
+
+from repro.roofline.analysis import parse_collectives, roofline_terms
+from repro.roofline.hlo_stats import analyze_hlo
+
+_TOY_HLO = """
+HloModule toy
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%addc
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%ip, %ar)
+}
+
+%addc (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (w: f32[8,8]) -> (s32[], f32[8,8]) {
+  %w = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%z, %w)
+  ROOT %wl = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body
+}
+"""
+
+
+def test_trip_count_multiplication():
+    st = analyze_hlo(_TOY_HLO, world=256)
+    # dot: 2*8*8*8 = 1024 flops per iteration x 10 trips (+ 1-flop adds)
+    assert 10 * 1024 <= st.flops < 10 * 1024 + 2000, st.flops
+    # all-reduce of 8x8 f32 = 256 B; ring 2*(n-1)/n with n=16 -> 480 B x 10
+    np.testing.assert_allclose(st.coll_bytes["all-reduce"], 4800.0, rtol=1e-6)
+    assert st.coll_ops == 10
+
+
+def test_collective_formulas():
+    hlo = """
+ENTRY %main (x: f32[64]) -> f32[1024] {
+  %x = f32[64]{0} parameter(0)
+  ROOT %ag = f32[1024]{0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+    st = analyze_hlo(hlo, world=256)
+    # gathered result 4096 B x (n-1)/n with n=16
+    np.testing.assert_allclose(st.coll_bytes["all-gather"], 4096 * 15 / 16, rtol=1e-6)
+    c = parse_collectives(hlo, world=256)
+    np.testing.assert_allclose(c.by_kind["all-gather"], 4096 * 15 / 16, rtol=1e-6)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = roofline_terms(
+        flops=197e12,  # exactly 1 s of compute
+        hbm_bytes=819e9 / 2,  # 0.5 s of memory
+        coll_bytes=100e9 * 2,  # 2 s of collective at 2x50GB/s
+        chips=256,
+        model_flops_global=197e12 * 256 * 0.5,
+    )
+    assert r.bottleneck == "collective"
+    np.testing.assert_allclose(r.t_compute, 1.0)
+    np.testing.assert_allclose(r.t_memory, 0.5)
+    np.testing.assert_allclose(r.t_collective, 2.0)
+    np.testing.assert_allclose(r.useful_flops_ratio, 0.5)
+    np.testing.assert_allclose(r.roofline_fraction, 0.25)  # 0.5s useful / 2s bound
+
+
+def test_slice_fusion_effective_bytes():
+    hlo = """
+%fused_slice (param_0.1: f32[1000,64], param_1.2: s32[]) -> f32[1,64] {
+  %param_0.1 = f32[1000,64]{1,0} parameter(0)
+  %param_1.2 = s32[] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %ds = f32[1,64]{1,0} dynamic-slice(%param_0.1, %param_1.2, %z), dynamic_slice_sizes={1,64}
+}
+
+ENTRY %main (big: f32[1000,64], i: s32[]) -> f32[1,64] {
+  %big = f32[1000,64]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[1,64]{1,0} fusion(%big, %i), kind=kLoop, calls=%fused_slice
+}
+"""
+    st = analyze_hlo(hlo, world=8)
+    # must count the 256-B slice (x2-ish incl. result), NOT the 256-KB buffer
+    assert st.hbm_bytes < 2048, st.hbm_bytes
