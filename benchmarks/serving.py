@@ -3,6 +3,14 @@
 CPU wall-clock, reduced llama config — the RELATIVE throughput and agreement
 numbers support EXPERIMENTS.md §Perf C2 (weight compression as a serving
 lever).  Emits name,us_per_call,derived CSV rows.
+
+``--sweep-backends`` additionally runs the compressed model once per kernel
+backend (auto / xla / pallas / reference) through the unified dispatch
+runtime and emits one CSV row per backend, annotated with the dispatcher's
+hit counters — i.e. which execution path (fused / fused_batched / two_gemm /
+dense) every linear in the compiled program actually took.
+
+    PYTHONPATH=src python benchmarks/serving.py [--sweep-backends]
 """
 
 from __future__ import annotations
@@ -17,40 +25,59 @@ from repro.configs.registry import get_arch
 from repro.core import CompressionPolicy, compress_tree, spectralize_params
 from repro.data.synthetic import SyntheticLM
 from repro.models.model import build_model
+from repro.runtime import dispatch
+from repro.runtime.dispatch import BACKENDS, DispatchConfig, use_dispatch
 
 
-def run(alphas=(0.4, 0.2), q: int = 4, batch: int = 8, prompt: int = 16, gen: int = 16):
+def _setup(batch: int, prompt: int):
     cfg = get_arch("llama3.2-1b", reduced=True)
     model = build_model(cfg)
     params = spectralize_params(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(9))
     data = SyntheticLM(cfg, batch=batch, seq=prompt, kind="serve")
     bt = {k: jnp.asarray(v) for k, v in data.at_step(0).items()}
+    return cfg, model, params, bt
+
+
+def _bench(model, p, bt, prompt: int, gen: int):
     max_len = prompt + gen
 
-    def bench(p):
-        logits, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len))(p, bt)
-        step = jax.jit(model.decode_step)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        # warm
-        l2, c2 = step(p, cache, tok, jnp.int32(prompt))
-        jax.block_until_ready(l2)
-        t0 = time.perf_counter()
-        toks = [tok]
-        c = cache
-        for i in range(gen):
-            logits, c = step(p, c, toks[-1], jnp.int32(prompt + i))
-            toks.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
-        jax.block_until_ready(toks[-1])
-        dt = time.perf_counter() - t0
-        return np.concatenate([np.asarray(t) for t in toks[1:]], axis=1), dt
+    # Fresh closures per bench run: pjit's global jaxpr cache is keyed on the
+    # function object, and the dispatch policy is ambient trace-time state —
+    # reusing `model.decode_step` across backends would silently reuse the
+    # FIRST backend's traced program (same idiom as serve_step.make_*_step).
+    def prefill_fn(p, b):
+        return model.prefill(p, b, max_len)
 
-    ref, t_dense = bench(params)
+    def decode_fn(p, c, t, pos):
+        return model.decode_step(p, c, t, pos)
+
+    logits, cache = jax.jit(prefill_fn)(p, bt)
+    step = jax.jit(decode_fn)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    # warm
+    l2, c2 = step(p, cache, tok, jnp.int32(prompt))
+    jax.block_until_ready(l2)
+    t0 = time.perf_counter()
+    toks = [tok]
+    c = cache
+    for i in range(gen):
+        logits, c = step(p, c, toks[-1], jnp.int32(prompt + i))
+        toks.append(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+    jax.block_until_ready(toks[-1])
+    dt = time.perf_counter() - t0
+    return np.concatenate([np.asarray(t) for t in toks[1:]], axis=1), dt
+
+
+def run(alphas=(0.4, 0.2), q: int = 4, batch: int = 8, prompt: int = 16, gen: int = 16):
+    cfg, model, params, bt = _setup(batch, prompt)
+
+    ref, t_dense = _bench(model, params, bt, prompt, gen)
     rows = [dict(name="dense", alpha=0.0, seconds=t_dense, tok_s=batch * gen / t_dense, agree=1.0, ratio=1.0)]
     for alpha in alphas:
         cp, _, rep = compress_tree(
             params, CompressionPolicy(alpha=alpha, q=q, min_dim=32), jax.random.PRNGKey(1)
         )
-        out, dt = bench(cp)
+        out, dt = _bench(model, cp, bt, prompt, gen)
         rows.append(
             dict(
                 name=f"alpha={alpha}",
@@ -64,13 +91,71 @@ def run(alphas=(0.4, 0.2), q: int = 4, batch: int = 8, prompt: int = 16, gen: in
     return rows
 
 
+def _hits_summary() -> str:
+    """'path=count' pairs for the lowrank op, plus dense-linear sites."""
+    agg = dispatch.counters_by_path()
+    parts = [
+        f"{path}={n}" for (op, path), n in sorted(agg.items()) if op == "lowrank_matmul"
+    ]
+    dense_n = sum(n for (op, _), n in agg.items() if op == "dense")
+    if dense_n:
+        parts.append(f"dense_linear={dense_n}")
+    return "|".join(parts) if parts else "none"
+
+
+def run_backend_sweep(
+    alpha: float = 0.4, q: int = 4, batch: int = 4, prompt: int = 16, gen: int = 8
+):
+    """One row per dispatch backend for the SAME compressed checkpoint.
+
+    Each backend gets a fresh trace (fresh jit closures), so the dispatcher's
+    trace-time counters describe exactly the paths in that backend's program.
+    """
+    cfg, model, params, bt = _setup(batch, prompt)
+    cp, _, rep = compress_tree(
+        params, CompressionPolicy(alpha=alpha, q=q, min_dim=32), jax.random.PRNGKey(1)
+    )
+    rows = []
+    ref = None
+    for backend in BACKENDS:
+        dispatch.reset_counters()
+        with use_dispatch(DispatchConfig(backend=backend)):
+            out, dt = _bench(model, cp, bt, prompt, gen)
+        if ref is None:
+            ref = out
+        rows.append(
+            dict(
+                name=f"backend={backend}",
+                alpha=alpha,
+                seconds=dt,
+                tok_s=batch * gen / dt,
+                agree=float((out == ref).mean()),
+                ratio=rep.ratio,
+                hits=_hits_summary(),
+            )
+        )
+    return rows
+
+
 def emit_csv(rows):
     for r in rows:
+        extra = f";hits={r['hits']}" if "hits" in r else ""
         print(
             f"serving/{r['name']},{r['seconds']*1e6:.0f},"
             f"tok_s={r['tok_s']:.1f};agree={r['agree']:.3f};ratio={r['ratio']:.3f}"
+            f"{extra}"
         )
 
 
 if __name__ == "__main__":
-    emit_csv(run())
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--sweep-backends",
+        action="store_true",
+        help="run the compressed model once per kernel backend and report "
+        "per-backend throughput + dispatcher hit counts",
+    )
+    args = ap.parse_args()
+    emit_csv(run_backend_sweep() if args.sweep_backends else run())

@@ -75,11 +75,24 @@ class ArchConfig:
     tie_embeddings: bool = False
     remat: str = "block"  # none | block (checkpoint each scanned block)
     remat_group: int = 1  # layers per activation checkpoint (memory knob)
-    use_pallas: bool = False  # XLA path for dry-run; Pallas on real TPU
+    # kernel backend policy, consumed by repro.runtime.dispatch:
+    #   auto      — shape/platform selection table (fused Pallas on TPU when
+    #               it fits VMEM, XLA two-GEMM / dense-remat elsewhere)
+    #   xla | pallas | reference — pin every op to one backend
+    kernels: str = "auto"
+    # DEPRECATED alias for kernels="pallas"; folded into ``kernels`` below.
+    use_pallas: bool = False
     optimizer: str = "adamw"  # adamw | adafactor (memory-bound giants) | sgdm
     accum_steps: int = 1  # microbatch gradient accumulation (train memory knob)
 
     # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.kernels not in ("auto", "xla", "pallas", "reference"):
+            raise ValueError(f"kernels={self.kernels!r} not in auto|xla|pallas|reference")
+        if self.use_pallas and self.kernels == "auto":
+            # legacy configs: use_pallas=True meant "force the Pallas path"
+            object.__setattr__(self, "kernels", "pallas")
+
     @property
     def d_inner(self) -> int:  # ssm inner width
         return self.ssm_expand * self.d_model

@@ -101,7 +101,9 @@ def distributed_rsi(
     body = functools.partial(
         _rsi_block, k=k, q=q, row_axis=row_axis, col_axis=col_axis
     )
-    fn = jax.shard_map(
+    from repro.runtime.compat import shard_map
+
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(row_axis, col_axis), P(col_axis, None)),

@@ -38,22 +38,19 @@ def lowrank_params(A: jax.Array, B: jax.Array) -> dict:
     return {"a": A, "b": B}
 
 
-def apply_linear(p: Any, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+def apply_linear(p: Any, x: jax.Array) -> jax.Array:
     """y = x @ W for dense W, or (x @ A) @ B for the factored form.
 
-    ``use_pallas`` routes the factored product through the fused
-    kernels.lowrank_matmul VMEM-resident kernel (TPU hot path).
+    Backend selection (fused Pallas VMEM kernel vs two XLA GEMMs vs dense
+    rematerialization, batched fused for stacked factors) is owned entirely
+    by :mod:`repro.runtime.dispatch` — install a policy with ``use_dispatch``;
+    without one the "auto" shape/platform table applies.
     """
-    if is_lowrank(p):
-        if use_pallas:
-            from repro.kernels import ops as kops
+    from repro.runtime import dispatch
 
-            return kops.lowrank_matmul(x, p["a"], p["b"])
-        t = jnp.matmul(x, p["a"], preferred_element_type=jnp.float32)
-        return jnp.matmul(t.astype(x.dtype), p["b"], preferred_element_type=jnp.float32).astype(
-            x.dtype
-        )
-    return jnp.matmul(x, p, preferred_element_type=jnp.float32).astype(x.dtype)
+    if is_lowrank(p):
+        return dispatch.lowrank_apply(x, p["a"], p["b"])
+    return dispatch.dense_apply(x, p)
 
 
 def param_count(p: Any) -> int:

@@ -8,10 +8,14 @@ scratch accumulator for the whole reduction:
     t[bm, r]   += x[bm, bk] @ A[bk, r]          (fp32 scratch)
     on last k:  y[bm, N]    = t @ B[r, N]       (B resident in VMEM)
 
-VMEM budget @ bf16, bm=256, bk=512, r<=256, N<=8192:
-  x 256KiB + A 256KiB + B 4MiB + t 256KiB(f32) + y 4MiB(f32->bf16) ~= 9MiB.
-The ops.py wrapper falls back to two tiled GEMMs when r/N exceed the
-residency limits (checked statically).
+The batched variant adds a leading stack axis (grid (L, M/bm, K/bk)) so
+lax.scan-stacked layer params and (E, ...) expert factors hit the fused
+kernel instead of falling back to per-slice XLA GEMMs.
+
+Residency is checked against a DTYPE-AWARE byte budget (``fused_vmem_bytes``)
+rather than static rank/N constants; the runtime dispatcher
+(repro.runtime.dispatch) consults the same budget when choosing a path, so a
+shape that reaches these kernels has already been certified to fit.
 """
 
 from __future__ import annotations
@@ -23,15 +27,42 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["lowrank_matmul_kernel", "lowrank_matmul_pallas", "fits_fused"]
+__all__ = [
+    "lowrank_matmul_kernel",
+    "lowrank_matmul_pallas",
+    "lowrank_matmul_batched_pallas",
+    "fused_vmem_bytes",
+    "fits_fused",
+    "DEFAULT_VMEM_LIMIT",
+]
 
-# conservative VMEM residency limits for the fused path
-_MAX_RANK = 512
-_MAX_N = 8192
+# Leave ~2 MiB of the 16 MiB/core VMEM for Mosaic's own double-buffering and
+# semaphores; everything the kernel touches must fit under this.
+DEFAULT_VMEM_LIMIT = 14 * 2**20
 
 
-def fits_fused(r: int, n: int) -> bool:
-    return r <= _MAX_RANK and n <= _MAX_N
+def fused_vmem_bytes(r: int, n: int, dtype, *, bm: int = 256, bk: int = 512) -> int:
+    """Worst-case VMEM residency of one fused-kernel grid step.
+
+    x block (bm, bk) + A block (bk, r) + resident B (r, n) + output block
+    (bm, n) in the storage dtype, plus the fp32 accumulator (bm, r) and the
+    fp32 t @ B product (bm, n) before the output cast.
+    """
+    s = jnp.dtype(dtype).itemsize
+    return (bm * bk + bk * r + r * n + bm * n) * s + (bm * r + bm * n) * 4
+
+
+def fits_fused(
+    r: int,
+    n: int,
+    dtype=jnp.bfloat16,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    limit: int = DEFAULT_VMEM_LIMIT,
+) -> bool:
+    """Dtype-aware residency check for the fused (B-in-VMEM) path."""
+    return fused_vmem_bytes(r, n, dtype, bm=bm, bk=bk) <= limit
 
 
 def lowrank_matmul_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -53,6 +84,30 @@ def lowrank_matmul_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
         ).astype(o_ref.dtype)
 
 
+def lowrank_matmul_batched_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Stacked variant: blocks carry a leading length-1 stack axis.
+
+    Grid (L, M/bm, K/bk); K iterates innermost, so the fp32 accumulator is
+    private to each (l, m) tile exactly as in the 2-D kernel.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], a_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        t = acc_ref[...].astype(x_ref.dtype)
+        o_ref[0] = jnp.dot(
+            t, b_ref[0], preferred_element_type=jnp.float32
+        ).astype(o_ref.dtype)
+
+
 def _pad_to(x, m, axis):
     pad = (-x.shape[axis]) % m
     if pad == 0:
@@ -62,7 +117,34 @@ def _pad_to(x, m, axis):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def _check_shapes(x_shape, a_shape, b_shape):
+    K, r = a_shape[-2], a_shape[-1]
+    if x_shape[-1] != K:
+        raise ValueError(
+            f"lowrank_matmul: x contraction dim {x_shape[-1]} != A rows {K} "
+            f"(x {x_shape}, A {a_shape})"
+        )
+    if b_shape[-2] != r:
+        raise ValueError(
+            f"lowrank_matmul: A rank {r} != B rows {b_shape[-2]} "
+            f"(A {a_shape}, B {b_shape})"
+        )
+
+
+def _check_fits(r, n, dtype, bm, bk, limit):
+    if not fits_fused(r, n, dtype, bm=bm, bk=bk, limit=limit):
+        raise ValueError(
+            f"lowrank_matmul: fused path needs "
+            f"{fused_vmem_bytes(r, n, dtype, bm=bm, bk=bk)} bytes of VMEM "
+            f"(r={r}, N={n}, dtype={jnp.dtype(dtype).name}, bm={bm}, bk={bk}) "
+            f"> limit {limit}; use the two-GEMM fallback "
+            f"(repro.runtime.dispatch routes this automatically)"
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "interpret", "vmem_limit")
+)
 def lowrank_matmul_pallas(
     x: jax.Array,
     A: jax.Array,
@@ -71,14 +153,19 @@ def lowrank_matmul_pallas(
     bm: int = 256,
     bk: int = 512,
     interpret: bool = False,
+    vmem_limit: int = DEFAULT_VMEM_LIMIT,
 ) -> jax.Array:
     """y = (x @ A) @ B.  x: (M, K); A: (K, r); B: (r, N)."""
+    if x.ndim != 2 or A.ndim != 2 or B.ndim != 2:
+        raise ValueError(
+            f"lowrank_matmul_pallas expects 2-D operands, got "
+            f"x {x.shape}, A {A.shape}, B {B.shape}"
+        )
+    _check_shapes(x.shape, A.shape, B.shape)
     M, K = x.shape
-    K2, r = A.shape
-    r2, N = B.shape
-    assert K == K2 and r == r2, (x.shape, A.shape, B.shape)
-    assert fits_fused(r, N), "use the two-GEMM fallback (ops.lowrank_matmul)"
+    r, N = B.shape
     bm_, bk_ = min(bm, M), min(bk, K)
+    _check_fits(r, N, x.dtype, bm_, bk_, vmem_limit)
     x_p = _pad_to(_pad_to(x, bm_, 0), bk_, 1)
     a_p = _pad_to(A, bk_, 0)
     Mp, Kp = x_p.shape
@@ -98,3 +185,58 @@ def lowrank_matmul_pallas(
         interpret=interpret,
     )(x_p, a_p, B)
     return out[:M]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "interpret", "vmem_limit")
+)
+def lowrank_matmul_batched_pallas(
+    x: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    vmem_limit: int = DEFAULT_VMEM_LIMIT,
+) -> jax.Array:
+    """Stacked fused low-rank matmul: y[l] = (x[l] @ A[l]) @ B[l].
+
+    x: (L, M, K); A: (L, K, r); B: (L, r, N).  One fused kernel launch for
+    the whole stack — the path taken by scan-stacked layer params and MoE
+    expert factors (flatten (L, E, ...) leading dims to one L first).
+    """
+    if x.ndim != 3 or A.ndim != 3 or B.ndim != 3:
+        raise ValueError(
+            f"lowrank_matmul_batched_pallas expects 3-D operands, got "
+            f"x {x.shape}, A {A.shape}, B {B.shape}"
+        )
+    if not (x.shape[0] == A.shape[0] == B.shape[0]):
+        raise ValueError(
+            f"lowrank_matmul_batched_pallas: stack dims disagree "
+            f"(x {x.shape}, A {A.shape}, B {B.shape})"
+        )
+    _check_shapes(x.shape, A.shape, B.shape)
+    L, M, K = x.shape
+    r, N = B.shape[-2:]
+    bm_, bk_ = min(bm, M), min(bk, K)
+    _check_fits(r, N, x.dtype, bm_, bk_, vmem_limit)
+    x_p = _pad_to(_pad_to(x, bm_, 1), bk_, 2)
+    a_p = _pad_to(A, bk_, 1)
+    Mp, Kp = x_p.shape[1:]
+    grid = (L, Mp // bm_, Kp // bk_)
+
+    out = pl.pallas_call(
+        functools.partial(lowrank_matmul_batched_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda l, m, k: (l, m, k)),
+            pl.BlockSpec((1, bk_, r), lambda l, m, k: (l, k, 0)),
+            pl.BlockSpec((1, r, N), lambda l, m, k: (l, 0, 0)),  # B[l] resident
+        ],
+        out_specs=pl.BlockSpec((1, bm_, N), lambda l, m, k: (l, m, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, Mp, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm_, r), jnp.float32)],
+        interpret=interpret,
+    )(x_p, a_p, B)
+    return out[:, :M]

@@ -1,55 +1,43 @@
-"""jit'd public wrappers for the Pallas kernels with XLA fallbacks.
+"""Public kernel entry points, routed through the unified dispatch runtime.
 
-On CPU (this container) Pallas-TPU kernels cannot lower natively, so the
-wrappers run them with ``interpret=True`` when the backend is CPU — the
-kernel *body* executes (all BlockSpec index maps, scratch semantics, grid
-order), which is what the allclose tests validate.  On TPU backends they
-compile for real.  Shapes outside kernel residency limits fall back to the
-reference implementations (which are themselves production-grade XLA).
+Historically these wrappers owned backend selection themselves (interpret
+detection, ``fits_fused`` residency checks, XLA fallbacks).  All of that
+policy now lives in :mod:`repro.runtime.dispatch`; this module remains as the
+stable ``kernels.ops`` import surface.  Pin a backend with::
+
+    from repro.runtime.dispatch import use_dispatch
+    with use_dispatch(backend="pallas"):   # or "xla" / "reference" / "auto"
+        y = ops.lowrank_matmul(x, A, B)
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
-from repro.kernels.lowrank_matmul import fits_fused, lowrank_matmul_pallas
-from repro.kernels.sketch_matmul import sketch_matmul_pallas
-from repro.kernels.ssd_scan import ssd_scan_pallas
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.runtime import dispatch as _dispatch
 
 __all__ = ["lowrank_matmul", "sketch_matmul", "ssd_scan", "flash_attention"]
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def sketch_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
     """(M,K) @ (K,N) — RSI sketch GEMM."""
-    return sketch_matmul_pallas(a, b, interpret=_interpret())
+    return _dispatch.sketch_matmul(a, b)
 
 
 def lowrank_matmul(x: jax.Array, A: jax.Array, B: jax.Array) -> jax.Array:
-    """y = (x @ A) @ B with the (., r) intermediate fused in VMEM.
+    """y = (x @ A) @ B via the dispatch table (fused VMEM kernel, batched
+    fused kernel for stacked factors, two tiled GEMMs, or dense remat).
 
-    Accepts leading batch dims on x (flattened internally).
+    Accepts leading batch dims on x, and stacked (L, ...) factors.
     """
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if not fits_fused(A.shape[-1], B.shape[-1]):
-        y = _ref.lowrank_matmul_ref(x2, A, B)
-    else:
-        y = lowrank_matmul_pallas(x2, A, B, interpret=_interpret())
-    return y.reshape(lead + (B.shape[-1],))
+    return _dispatch.lowrank_apply(x, A, B)
 
 
 def ssd_scan(x, dt, B_in, C_in, A, *, chunk: int = 128):
     """Mamba2 SSD chunked scan.  Returns (y, final_state)."""
-    return ssd_scan_pallas(x, dt, B_in, C_in, A, chunk=chunk, interpret=_interpret())
+    return _dispatch.ssd_scan(x, dt, B_in, C_in, A, chunk=chunk)
 
 
 def flash_attention(q, k, v, *, causal: bool = True):
     """Forward-only flash attention (prefill hot path)."""
-    return flash_attention_pallas(q, k, v, causal=causal, interpret=_interpret())
+    return _dispatch.flash_attention(q, k, v, causal=causal)

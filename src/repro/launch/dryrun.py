@@ -31,6 +31,7 @@ from repro.launch.mesh import HW, make_production_mesh, make_rules
 from repro.models.model import analytic_param_count, batch_spec_template, build_model
 from repro.roofline.analysis import parse_collectives, roofline_terms
 from repro.roofline.hlo_stats import analyze_hlo
+from repro.runtime.dispatch import DispatchConfig, use_dispatch
 from repro.sharding.rules import param_specs
 from repro.train import optimizer as opt_mod
 from repro.train.serve_step import cache_specs, make_decode_step, make_prefill_step
@@ -78,8 +79,14 @@ def _batch_shardings(batch_struct, rules):
 
 
 def build_lowered(arch_id: str, shape_name: str, mesh, *, reduced: bool = False):
-    """Returns (lowered, meta) for one cell."""
+    """Returns (lowered, meta) for one cell.  Kernel-backend selection for
+    every linear happens at trace time under the arch's dispatch policy."""
     cfg = get_arch(arch_id, reduced=reduced)
+    with use_dispatch(DispatchConfig.from_arch(cfg)):
+        return _build_lowered(cfg, arch_id, shape_name, mesh)
+
+
+def _build_lowered(cfg, arch_id: str, shape_name: str, mesh):
     cell = get_shape(shape_name)
     rules = make_rules(mesh, sequence_parallel=cell.kind != "decode")
     model = build_model(cfg)
@@ -176,6 +183,8 @@ def run_cell(arch_id, shape_name, *, multi_pod: bool, reduced=False, save=True):
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict] per program
+        cost = cost[0] if cost else {}
     # cost_analysis counts while bodies ONCE (no trip counts) — useless for
     # scanned models.  analyze_hlo walks the module with trip-count
     # multiplication; we record both (raw for reference).

@@ -2,7 +2,13 @@
 RSI-compressed checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-        --batch 4 --prompt-len 16 --gen 32 [--compress-alpha 0.3 --q 4]
+        --batch 4 --prompt-len 16 --gen 32 [--compress-alpha 0.3 --q 4] \
+        [--kernels auto|xla|pallas|reference]
+
+Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
+overrides the arch config's ``kernels`` field, and the dispatcher's hit
+counters are printed after generation so you can see which path every linear
+actually took.
 """
 
 from __future__ import annotations
@@ -21,6 +27,12 @@ def main(argv=None):
     ap.add_argument("--compress-alpha", type=float, default=0.0)
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--kernels",
+        choices=["auto", "xla", "pallas", "reference"],
+        default=None,
+        help="kernel backend (default: the arch config's `kernels` field)",
+    )
     args = ap.parse_args(argv)
 
     import jax
@@ -31,6 +43,8 @@ def main(argv=None):
     from repro.core import CompressionPolicy, compress_tree
     from repro.data.synthetic import SyntheticLM
     from repro.models.model import build_model
+    from repro.runtime import dispatch
+    from repro.runtime.dispatch import DispatchConfig, use_dispatch
     from repro.train.serve_step import greedy_generate
 
     cfg = get_arch(args.arch, reduced=args.reduced)
@@ -47,13 +61,23 @@ def main(argv=None):
     batch = {k: jnp.asarray(v) for k, v in data.at_step(0).items()}
     max_len = args.prompt_len + args.gen
 
+    dcfg = (
+        DispatchConfig(backend=args.kernels)
+        if args.kernels is not None
+        else DispatchConfig.from_arch(cfg)
+    )
+    dispatch.reset_counters()
     t0 = time.time()
-    out = greedy_generate(model, params, batch, steps=args.gen, max_len=max_len)
+    with use_dispatch(dcfg):
+        out = greedy_generate(model, params, batch, steps=args.gen, max_len=max_len)
     out = np.asarray(out)
     dt = time.time() - t0
     print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s, params {n0/1e6:.1f}M)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, params {n0/1e6:.1f}M, "
+          f"kernels={dcfg.backend})")
     print("first sequences:", out[: min(2, args.batch), :12].tolist())
+    print("[dispatch] per-site kernel paths:")
+    print(dispatch.format_counters())
     return out
 
 

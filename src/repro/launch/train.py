@@ -49,6 +49,7 @@ def main(argv=None):
     from repro.core import CompressionPolicy, compress_tree
     from repro.data.synthetic import SyntheticLM
     from repro.models.model import build_model
+    from repro.runtime.dispatch import DispatchConfig, use_dispatch
     from repro.runtime.fault_tolerance import TrainLoopRunner
     from repro.train import optimizer as opt_mod
     from repro.train.train_step import TrainState, init_train_state, make_train_step
@@ -99,13 +100,16 @@ def main(argv=None):
         checkpointer,
         save_every=args.save_every,
     )
-    state, metrics = runner.run(
-        state,
-        args.steps,
-        shard_fn=lambda b: jax.tree_util.tree_map(jnp.asarray, b),
-        start_step=start_step,
-        on_metrics=on_metrics,
-    )
+    # the arch's kernel policy must be ambient while the step traces (first
+    # call inside runner.run), same as serve/dryrun
+    with use_dispatch(DispatchConfig.from_arch(cfg)):
+        state, metrics = runner.run(
+            state,
+            args.steps,
+            shard_fn=lambda b: jax.tree_util.tree_map(jnp.asarray, b),
+            start_step=start_step,
+            on_metrics=on_metrics,
+        )
     if checkpointer:
         checkpointer.wait()
     if runner.watchdog.straggler_steps:

@@ -303,12 +303,12 @@ def gqa_init(key, cfg, dtype, *, d_model=None):
     return p
 
 
-def _qkv(p, x, cfg, positions, *, rope: bool, use_pallas=False):
+def _qkv(p, x, cfg, positions, *, rope: bool):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = nn.dense(p["wq"], x, use_pallas=use_pallas)
-    k = nn.dense(p["wk"], x, use_pallas=use_pallas)
-    v = nn.dense(p["wv"], x, use_pallas=use_pallas)
+    q = nn.dense(p["wq"], x)
+    k = nn.dense(p["wk"], x)
+    v = nn.dense(p["wv"], x)
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)
@@ -327,9 +327,9 @@ def gqa_forward(p, x, cfg, *, positions=None, causal=True, rope=True, return_cac
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    q, k, v = _qkv(p, x, cfg, positions, rope=rope, use_pallas=cfg.use_pallas)
+    q, k, v = _qkv(p, x, cfg, positions, rope=rope)
     out = chunked_attention(q, k, v, causal=causal, window=cfg.sliding_window)
-    out = nn.dense(p["wo"], out.reshape(B, S, -1), use_pallas=cfg.use_pallas)
+    out = nn.dense(p["wo"], out.reshape(B, S, -1))
     if not return_cache:
         return out
     # Prefill cache; SWA keeps only the last `window` positions (ring layout:

@@ -35,11 +35,11 @@ def _ffn_init(key, d, f, dtype):
     }
 
 
-def _ffn(p, x, use_pallas=False):
-    h = nn.dense(p["w_up"], x, use_pallas=use_pallas)
+def _ffn(p, x):
+    h = nn.dense(p["w_up"], x)
     h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     h = maybe_constrain(h, ("batch", None, "tp"))
-    return nn.dense(p["w_down"], h, use_pallas=use_pallas)
+    return nn.dense(p["w_down"], h)
 
 
 def _enc_layer_init(key, cfg, dtype):
@@ -101,7 +101,7 @@ def encdec_encode(p, frames, cfg):
         hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
         h = h + attn.gqa_forward(lp["attn"], hh, cfg, causal=False, rope=False)
         hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
-        return h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+        return h + _ffn(lp["mlp"], hh)
 
     x = _scan(body, p["enc_layers"], x, remat)
     return nn.layernorm(p["enc_norm"], x, cfg.norm_eps)
@@ -125,14 +125,14 @@ def encdec_forward_features(p, batch, cfg):
         kv = attn.cross_attn_kv(lp["cross"], enc_out, cfg)
         h = h + attn.cross_attn(lp["cross"], hh, kv, cfg)
         hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
-        return h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+        return h + _ffn(lp["mlp"], hh)
 
     x = _scan(body, p["dec_layers"], x, remat)
     return nn.layernorm(p["dec_norm"], x, cfg.norm_eps), 0.0
 
 
 def encdec_head_apply(p, x, cfg):
-    logits = nn.dense(p["lm_head"], x, use_pallas=cfg.use_pallas).astype(jnp.float32)
+    logits = nn.dense(p["lm_head"], x).astype(jnp.float32)
     spec = ("batch",) + (None,) * (x.ndim - 2) + ("tp_vocab",)
     return maybe_constrain(logits, spec)
 
@@ -179,7 +179,7 @@ def encdec_prefill(p, batch, cfg, max_len: int):
         ckv = attn.cross_attn_kv(lp["cross"], enc_out, cfg)
         h = h + attn.cross_attn(lp["cross"], hh, ckv, cfg)
         hh = nn.layernorm(lp["mlp_norm"], h, cfg.norm_eps)
-        h = h + _ffn(lp["mlp"], hh, cfg.use_pallas)
+        h = h + _ffn(lp["mlp"], hh)
         k, v = kv
         pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
         return h, {

@@ -67,7 +67,7 @@ def _self_block(p, x, cfg, *, positions, mla: bool, use_moe: bool):
     if use_moe:
         m, aux = moe_mod.moe_forward(p["moe"], h, cfg)
     else:
-        m, aux = moe_mod.ffn_forward(p["mlp"], h, use_pallas=cfg.use_pallas), 0.0
+        m, aux = moe_mod.ffn_forward(p["mlp"], h), 0.0
     return x + m, aux
 
 
@@ -75,7 +75,7 @@ def _cross_block(p, x, img_kv, cfg):
     h = nn.rmsnorm(p["attn_norm"], x, cfg.norm_eps)
     x = x + attn.cross_attn(p["cross"], h, img_kv, cfg)
     h = nn.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
-    return x + moe_mod.ffn_forward(p["mlp"], h, use_pallas=cfg.use_pallas)
+    return x + moe_mod.ffn_forward(p["mlp"], h)
 
 
 def _mamba_block(p, x, cfg):
@@ -308,7 +308,7 @@ def _hybrid_segments(cfg):
 def _logits(p, x, cfg):
     head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
     if isinstance(head, dict):  # compressed lm_head
-        logits = nn.dense(head, x, use_pallas=cfg.use_pallas)
+        logits = nn.dense(head, x)
     else:
         logits = jnp.matmul(x, head, preferred_element_type=jnp.float32)
     spec = ("batch",) + (None,) * (x.ndim - 2) + ("tp_vocab",)
@@ -433,7 +433,7 @@ def lm_prefill(p, batch, cfg, max_len: int):
         a, kv = attn.gqa_forward(lp["attn"], hh, cfg, positions=aux_positions, return_cache=True)
         h = h + a
         hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
-        h = h + moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+        h = h + moe_mod.ffn_forward(lp["mlp"], hh)
         return h, pad_kv(kv)
 
     def mla_body(lp, h, *, use_moe):
@@ -446,7 +446,7 @@ def lm_prefill(p, batch, cfg, max_len: int):
         if use_moe:
             m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
         else:
-            m = moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+            m = moe_mod.ffn_forward(lp["mlp"], hh)
         h = h + m
         pad = [(0, 0), (0, max_len - S), (0, 0)]
         return h, {"c_kv": jnp.pad(c_kv, pad), "k_rope": jnp.pad(k_rope, pad)}
@@ -560,7 +560,7 @@ def lm_decode_step(p, cache, tokens, pos, cfg):
         a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
         h = h + a
         hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
-        return h + moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas), c2
+        return h + moe_mod.ffn_forward(lp["mlp"], hh), c2
 
     def moe_step(lp, h, c, *, mla):
         hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
@@ -573,7 +573,7 @@ def lm_decode_step(p, cache, tokens, pos, cfg):
         if "moe" in lp:
             m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
         else:
-            m = moe_mod.ffn_forward(lp["mlp"], hh, use_pallas=cfg.use_pallas)
+            m = moe_mod.ffn_forward(lp["mlp"], hh)
         return h + m, c2
 
     def mamba_step(lp, h, c):

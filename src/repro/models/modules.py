@@ -36,9 +36,10 @@ def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None)
     return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
 
 
-def dense(p, x, *, use_pallas: bool = False):
-    """x @ W with dense or factored kernels (see core/lowrank.py)."""
-    return apply_linear(p, x, use_pallas=use_pallas)
+def dense(p, x):
+    """x @ W with dense or factored kernels; backend selection is owned by
+    repro.runtime.dispatch (see core/lowrank.apply_linear)."""
+    return apply_linear(p, x)
 
 
 def rmsnorm_init(d: int, dtype):

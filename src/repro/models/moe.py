@@ -32,12 +32,12 @@ def ffn_init(key, d: int, f: int, dtype):
     }
 
 
-def ffn_forward(p, x, *, use_pallas=False):
-    g = nn.dense(p["w_gate"], x, use_pallas=use_pallas)
-    u = nn.dense(p["w_up"], x, use_pallas=use_pallas)
+def ffn_forward(p, x):
+    g = nn.dense(p["w_gate"], x)
+    u = nn.dense(p["w_up"], x)
     h = nn.swiglu(g, u)
     h = maybe_constrain(h, ("batch", None, "tp"))
-    return nn.dense(p["w_down"], h, use_pallas=use_pallas)
+    return nn.dense(p["w_down"], h)
 
 
 def moe_init(key, cfg, dtype):
@@ -121,11 +121,13 @@ def _dispatch_compute_combine(xf, ids, gates, experts, C, E, dtype):
     buf = buf.reshape(E, C, d)
 
     def emm(t, w):  # (E,C,a) @ (E,a,b)
-        if isinstance(w, dict):  # RSI-compressed expert kernels
-            t = jnp.einsum("eca,eak->eck", t, w["a"], preferred_element_type=jnp.float32)
-            return jnp.einsum(
-                "eck,ekb->ecb", t.astype(dtype), w["b"], preferred_element_type=jnp.float32
-            ).astype(dtype)
+        if isinstance(w, dict):  # RSI-compressed expert kernels: the stacked
+            # (E, ...) factors route through the dispatcher, which can launch
+            # ONE batched fused kernel over the expert axis instead of E
+            # two-GEMM round-trips.
+            from repro.core.lowrank import apply_linear
+
+            return apply_linear(w, t)
         return jnp.einsum("eca,eab->ecb", t, w, preferred_element_type=jnp.float32).astype(
             dtype
         )
@@ -200,7 +202,9 @@ def _moe_expert_parallel(p, x, cfg, rules):
         out = jax.lax.psum(out, "model")
         return out.astype(x_blk.dtype).reshape(Bl, Sl, d), aux
 
-    out, aux = jax.shard_map(
+    from repro.runtime.compat import shard_map
+
+    out, aux = shard_map(
         block,
         mesh=mesh,
         in_specs=(P(), e_spec, x_spec),
@@ -225,5 +229,5 @@ def moe_forward(p, x, cfg):
         out, aux = _moe_local(p, x, cfg)
 
     if "shared" in p:
-        out = out + ffn_forward(p["shared"], x, use_pallas=cfg.use_pallas)
+        out = out + ffn_forward(p["shared"], x)
     return out, aux

@@ -129,8 +129,8 @@ def mamba2_forward(p, u, cfg, *, return_cache=False):
     B, L, _ = u.shape
     din, s, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
 
-    z = nn.dense(p["w_z"], u, use_pallas=cfg.use_pallas)
-    x_raw = nn.dense(p["w_x"], u, use_pallas=cfg.use_pallas)
+    z = nn.dense(p["w_z"], u)
+    x_raw = nn.dense(p["w_x"], u)
     B_raw = nn.dense(p["w_B"], u)
     C_raw = nn.dense(p["w_C"], u)
     dt = jax.nn.softplus(
@@ -150,7 +150,7 @@ def mamba2_forward(p, u, cfg, *, return_cache=False):
     y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D_param"].astype(y.dtype)[None, None, :, None]
     y = y.reshape(B, L, din)
     y = nn.rmsnorm(p["ssm_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), cfg.norm_eps)
-    out = nn.dense(p["out_proj"], y, use_pallas=cfg.use_pallas)
+    out = nn.dense(p["out_proj"], y)
     if not return_cache:
         return out
     w = cfg.ssm_conv_width

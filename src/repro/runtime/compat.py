@@ -1,0 +1,56 @@
+"""JAX version compatibility shims for the distributed layer.
+
+The codebase targets the modern public APIs (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``); older installs (e.g.
+jax 0.4.x) expose ``jax.experimental.shard_map`` with ``check_rep`` and a
+``make_mesh`` without axis types.  Everything that builds meshes or
+shard_maps goes through these two wrappers so one import site owns the
+difference.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "axis_size"]
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` where available; the ``psum(1, axis)`` idiom
+    (constant-folded to a static int under named axes) on older jax."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the experimental API.
+
+    The replication-check kwarg is probed by signature: mid-band versions
+    expose ``jax.shard_map`` but still call it ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        import inspect
+
+        params = inspect.signature(jax.shard_map).parameters
+        kw = "check_vma" if "check_vma" in params else "check_rep"
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **{kw: check_vma}
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map  # jax<0.6
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the install supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=(axis_type.Auto,) * len(axis_names)
+            )
+        except TypeError:  # make_mesh predates axis_types
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)

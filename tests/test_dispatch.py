@@ -1,0 +1,291 @@
+"""Unit tests for the unified kernel-dispatch runtime.
+
+Covers the auto selection table (shape/backend -> chosen path), the
+use_dispatch context manager + per-site hit counters, ValueError input
+validation on the Pallas kernels, and allclose agreement between the stacked
+fused path and the XLA fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lowrank import apply_linear, lowrank_params
+from repro.kernels.lowrank_matmul import (
+    DEFAULT_VMEM_LIMIT,
+    fits_fused,
+    fused_vmem_bytes,
+    lowrank_matmul_batched_pallas,
+    lowrank_matmul_pallas,
+)
+from repro.runtime import dispatch
+from repro.runtime.dispatch import (
+    PATH_DENSE,
+    PATH_FUSED,
+    PATH_FUSED_BATCHED,
+    PATH_TWO_GEMM,
+    DispatchConfig,
+    choose_lowrank_path,
+    use_dispatch,
+)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# selection table
+# --------------------------------------------------------------------------- #
+class TestSelectionTable:
+    def test_auto_cpu_small_rank_is_two_gemm(self):
+        cfg = DispatchConfig()
+        got = choose_lowrank_path((64, 96), (96, 8), (8, 40), jnp.float32,
+                                  config=cfg, platform="cpu")
+        assert got == PATH_TWO_GEMM
+
+    def test_auto_tpu_fitting_shape_is_fused(self):
+        cfg = DispatchConfig()
+        got = choose_lowrank_path((64, 96), (96, 8), (8, 40), jnp.float32,
+                                  config=cfg, platform="tpu")
+        assert got == PATH_FUSED
+
+    def test_auto_tpu_stacked_is_fused_batched(self):
+        cfg = DispatchConfig()
+        got = choose_lowrank_path((4, 64, 96), (4, 96, 8), (4, 8, 40),
+                                  jnp.float32, config=cfg, platform="tpu")
+        assert got == PATH_FUSED_BATCHED
+
+    def test_over_breakeven_rank_with_big_batch_rematerializes_dense(self):
+        # r=90 >= break_even(96, 40) and M >= dense_min_tokens -> dense remat
+        cfg = DispatchConfig()
+        got = choose_lowrank_path((4096, 96), (96, 90), (90, 40), jnp.float32,
+                                  config=cfg, platform="cpu")
+        assert got == PATH_DENSE
+        # small token batch does not amortize the remat
+        got = choose_lowrank_path((64, 96), (96, 90), (90, 40), jnp.float32,
+                                  config=cfg, platform="cpu")
+        assert got == PATH_TWO_GEMM
+
+    def test_forced_pallas_respects_vmem_budget(self):
+        cfg = DispatchConfig(backend="pallas")
+        # r x N residency alone exceeds the budget at bf16 -> two-GEMM even
+        # when Pallas is pinned
+        assert not fits_fused(4096, 16384, jnp.bfloat16)
+        got = choose_lowrank_path((64, 8192), (8192, 4096), (4096, 16384),
+                                  jnp.bfloat16, config=cfg, platform="tpu")
+        assert got == PATH_TWO_GEMM
+
+    def test_vmem_budget_is_dtype_aware(self):
+        r, n = 512, 8192
+        assert fused_vmem_bytes(r, n, jnp.float32) > fused_vmem_bytes(r, n, jnp.bfloat16)
+        # a shape can fit at bf16 but not at fp32
+        ok16 = fits_fused(256, 4096, jnp.bfloat16)
+        ok32 = fits_fused(256, 4096, jnp.float32, limit=fused_vmem_bytes(256, 4096, jnp.bfloat16))
+        assert ok16 and not ok32
+
+    def test_reference_backend_pins_two_gemm(self):
+        cfg = DispatchConfig(backend="reference")
+        got = choose_lowrank_path((8192, 96), (96, 90), (90, 40), jnp.float32,
+                                  config=cfg, platform="tpu")
+        assert got == PATH_TWO_GEMM
+
+    def test_per_op_override(self):
+        cfg = DispatchConfig(backend="pallas", overrides=(("lowrank_matmul", "xla"),))
+        got = choose_lowrank_path((64, 96), (96, 8), (8, 40), jnp.float32,
+                                  config=cfg, platform="tpu")
+        assert got == PATH_TWO_GEMM
+
+    def test_invalid_backend_rejected(self):
+        with pytest.raises(ValueError):
+            DispatchConfig(backend="cuda")
+        with pytest.raises(ValueError):
+            DispatchConfig(overrides=(("not_an_op", "xla"),))
+
+    def test_from_arch_reads_kernels_field(self):
+        from repro.configs.registry import get_arch
+
+        cfg = get_arch("llama3.2-1b", reduced=True)
+        assert DispatchConfig.from_arch(cfg).backend == cfg.kernels == "auto"
+
+    def test_use_pallas_alias_folds_into_kernels(self):
+        import dataclasses
+
+        from repro.configs.registry import get_arch
+
+        cfg = dataclasses.replace(get_arch("llama3.2-1b", reduced=True), use_pallas=True)
+        assert cfg.kernels == "pallas"
+        assert DispatchConfig.from_arch(cfg).backend == "pallas"
+
+
+# --------------------------------------------------------------------------- #
+# context manager + counters
+# --------------------------------------------------------------------------- #
+class TestContextAndCounters:
+    def test_use_dispatch_nests_and_restores(self):
+        base = dispatch.active_dispatch()
+        with use_dispatch(backend="xla") as outer:
+            assert dispatch.active_dispatch() is outer
+            with use_dispatch(backend="pallas") as inner:
+                assert dispatch.active_dispatch() is inner
+            assert dispatch.active_dispatch() is outer
+        assert dispatch.active_dispatch() == base
+
+    def test_counters_record_selected_path(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x, A, B = _rand(ks[0], (16, 32)), _rand(ks[1], (32, 4)), _rand(ks[2], (4, 24))
+        dispatch.reset_counters()
+        with use_dispatch(backend="xla"):
+            apply_linear(lowrank_params(A, B), x)
+        agg = dispatch.counters_by_path()
+        assert agg == {("lowrank_matmul", PATH_TWO_GEMM): 1}
+
+        dispatch.reset_counters()
+        with use_dispatch(backend="pallas"):
+            apply_linear(lowrank_params(A, B), x)
+            apply_linear(lowrank_params(A, B), x)  # same site sig -> same key
+        assert dispatch.counters() == {
+            ("lowrank_matmul", PATH_FUSED, (1, 16, 32, 4, 24)): 2
+        }
+
+    def test_dense_linears_are_counted_too(self):
+        dispatch.reset_counters()
+        w = _rand(jax.random.PRNGKey(1), (32, 8))
+        x = _rand(jax.random.PRNGKey(2), (4, 32))
+        apply_linear(w, x)
+        assert dispatch.counters_by_path() == {("dense", "xla"): 1}
+
+
+# --------------------------------------------------------------------------- #
+# kernel input validation (satellite: bare asserts -> ValueError)
+# --------------------------------------------------------------------------- #
+class TestKernelValidation:
+    def test_shape_mismatch_raises_value_error(self):
+        x = jnp.zeros((8, 16))
+        A = jnp.zeros((17, 4))  # K mismatch
+        B = jnp.zeros((4, 8))
+        with pytest.raises(ValueError, match="contraction dim"):
+            lowrank_matmul_pallas(x, A, B, interpret=True)
+        with pytest.raises(ValueError, match="A rank"):
+            lowrank_matmul_pallas(jnp.zeros((8, 16)), jnp.zeros((16, 4)),
+                                  jnp.zeros((5, 8)), interpret=True)
+
+    def test_residency_violation_raises_value_error(self):
+        x = jnp.zeros((8, 16), jnp.bfloat16)
+        A = jnp.zeros((16, 4096), jnp.bfloat16)
+        B = jnp.zeros((4096, 16384), jnp.bfloat16)
+        with pytest.raises(ValueError, match="VMEM"):
+            lowrank_matmul_pallas(x, A, B, interpret=True)
+
+    def test_batched_stack_mismatch_raises(self):
+        with pytest.raises(ValueError, match="stack dims"):
+            lowrank_matmul_batched_pallas(
+                jnp.zeros((2, 8, 16)), jnp.zeros((3, 16, 4)), jnp.zeros((3, 4, 8)),
+                interpret=True,
+            )
+
+    def test_validation_survives_python_O(self):
+        # the old bare asserts vanished under `python -O`; ValueError must not
+        import subprocess
+        import sys
+
+        code = (
+            "import jax.numpy as jnp\n"
+            "from repro.kernels.lowrank_matmul import lowrank_matmul_pallas\n"
+            "try:\n"
+            "    lowrank_matmul_pallas(jnp.zeros((8, 16)), jnp.zeros((17, 4)),"
+            " jnp.zeros((4, 8)), interpret=True)\n"
+            "except ValueError:\n"
+            "    print('RAISED')\n"
+        )
+        out = subprocess.run(
+            [sys.executable, "-O", "-c", code],
+            capture_output=True, text=True, env=_env_with_src(),
+        )
+        assert "RAISED" in out.stdout, (out.stdout, out.stderr)
+
+
+def _env_with_src():
+    import os
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+# --------------------------------------------------------------------------- #
+# stacked fused path == fallback path
+# --------------------------------------------------------------------------- #
+class TestStackedFusedAllclose:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_stacked_factored_params_fused_vs_fallback(self, dtype):
+        L, M, K, r, N = 5, 33, 96, 8, 72
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        x = _rand(ks[0], (L, M, K), dtype)
+        A = _rand(ks[1], (L, K, r), dtype)
+        B = _rand(ks[2], (L, r, N), dtype)
+        p = lowrank_params(A, B)
+        with use_dispatch(backend="xla"):
+            want = apply_linear(p, x)
+        with use_dispatch(backend="pallas"):
+            got = apply_linear(p, x)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=tol, atol=tol,
+        )
+
+    def test_double_stacked_expert_factors(self):
+        # (L, E, ...) leading dims all flatten into one batched launch
+        L, E, C, K, r, N = 2, 3, 16, 48, 4, 32
+        ks = jax.random.split(jax.random.PRNGKey(8), 3)
+        x = _rand(ks[0], (L, E, C, K))
+        A = _rand(ks[1], (L, E, K, r))
+        B = _rand(ks[2], (L, E, r, N))
+        p = lowrank_params(A, B)
+        dispatch.reset_counters()
+        with use_dispatch(backend="pallas"):
+            got = apply_linear(p, x)
+        assert dispatch.counters_by_path() == {
+            ("lowrank_matmul", PATH_FUSED_BATCHED): 1
+        }
+        with use_dispatch(backend="xla"):
+            want = apply_linear(p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize(
+        "x_shape,out_shape",
+        [
+            ((2, 3, 5, 16), (2, 3, 5, 8)),  # extra inner dims
+            ((2, 16), (2, 8)),              # no inner M dim at all
+            ((2, 2, 5, 16), (2, 2, 5, 8)),  # inner dim coincides with stack
+        ],
+    )
+    def test_fallback_paths_canonicalize_stacked_layouts(self, x_shape, out_shape):
+        # regression: bare jnp.matmul broadcasting crashed on extra inner
+        # dims and silently misaligned an inner batch dim against the stack
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        x = _rand(ks[0], x_shape)
+        p = lowrank_params(_rand(ks[1], (2, 16, 4)), _rand(ks[2], (2, 4, 8)))
+        with use_dispatch(backend="xla"):
+            want = apply_linear(p, x)
+        with use_dispatch(backend="pallas"):
+            got = apply_linear(p, x)
+        assert want.shape == got.shape == out_shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_ops_wrapper_accepts_stacked_factors(self):
+        from repro.kernels import ops, ref
+
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        x = _rand(ks[0], (3, 10, 64))
+        A = _rand(ks[1], (3, 64, 8))
+        B = _rand(ks[2], (3, 8, 40))
+        got = ops.lowrank_matmul(x, A, B)
+        want = jnp.stack([ref.lowrank_matmul_ref(x[i], A[i], B[i]) for i in range(3)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

@@ -37,8 +37,8 @@ def test_distributed_rsi_matches_single_device():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core.distributed_rsi import distributed_rsi
         from repro.core import rsi, synth_spectrum_matrix, vgg_like_spectrum
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.runtime.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         W = synth_spectrum_matrix(jax.random.PRNGKey(0), 256, 512, vgg_like_spectrum(256))
         Wsh = jax.device_put(W, NamedSharding(mesh, P("data", "model")))
         d = distributed_rsi(Wsh, 32, 3, jax.random.PRNGKey(1), mesh)
@@ -47,7 +47,8 @@ def test_distributed_rsi_matches_single_device():
         as_ = (s.U * s.S[None]) @ s.Vt
         err = float(jnp.linalg.norm(ad - as_) / jnp.linalg.norm(as_))
         assert err < 1e-4, err
-        assert d.U.sharding.spec == P("data", None), d.U.sharding
+        # older jax normalizes away trailing Nones in PartitionSpec
+        assert d.U.sharding.spec in (P("data", None), P("data")), d.U.sharding
         assert d.Vt.sharding.spec == P(None, "model"), d.Vt.sharding
         print("OK", err)
     """)
@@ -66,8 +67,8 @@ def test_moe_expert_parallel_matches_local():
         p = moe.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
         ref, aux_ref = moe._moe_local(p, x, cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.runtime.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = MeshRules(mesh)
         with use_rules(rules):
             got, aux = jax.jit(lambda p, x: moe.moe_forward(p, x, cfg))(p, x)
@@ -84,8 +85,8 @@ def test_pipeline_parallel_matches_sequential():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.train.pipeline_parallel import gpipe_apply
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.runtime.compat import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         L, d = 8, 16
         ws = jax.random.normal(jax.random.PRNGKey(0), (L, d, d)) / d**0.5
         def block(w, x):
@@ -109,8 +110,9 @@ def test_elastic_checkpoint_reshard():
         import tempfile, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.checkpoint import checkpointer as ckpt
-        m1 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
-        m2 = jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.runtime.compat import make_mesh
+        m1 = make_mesh((2, 4), ("data", "model"))
+        m2 = make_mesh((8, 1), ("data", "model"))
         W = jnp.arange(64*32, dtype=jnp.float32).reshape(64, 32)
         state = {"w": jax.device_put(W, NamedSharding(m1, P("data", "model")))}
         with tempfile.TemporaryDirectory() as d:
@@ -130,7 +132,8 @@ def test_powersgd_compressed_allreduce():
         import jax, jax.numpy as jnp, numpy as np, functools
         from repro.core.gradient_compression import (
             PowerSGDConfig, init_powersgd, compress_allreduce, comm_bytes)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.runtime.compat import make_mesh
+        mesh = make_mesh((8,), ("data",))
         cfg = PowerSGDConfig(rank=8, min_size=1024)
         # shared low-rank signal + small per-device noise: a rank-8 sketch of
         # the MEAN must capture the signal (pure-noise means are full-rank and
@@ -143,11 +146,12 @@ def test_powersgd_compressed_allreduce():
         def body(g, st):
             out, st2 = compress_allreduce({"w": g}, st, "data", cfg)
             return out["w"], None
-        f = jax.shard_map(lambda g: body(g[0], state)[0][None],
-                          mesh=mesh,
-                          in_specs=jax.sharding.PartitionSpec("data"),
-                          out_specs=jax.sharding.PartitionSpec("data"),
-                          check_vma=False)
+        from repro.runtime.compat import shard_map
+        f = shard_map(lambda g: body(g[0], state)[0][None],
+                      mesh=mesh,
+                      in_specs=jax.sharding.PartitionSpec("data"),
+                      out_specs=jax.sharding.PartitionSpec("data"),
+                      check_vma=False)
         got = f(grads_per_dev)
         dense_mean = jnp.mean(grads_per_dev, axis=0)
         # error feedback handles the residual over steps; single step should
