@@ -1,0 +1,101 @@
+"""Continuous-batching serving demo: RSI-compressed model under live traffic.
+
+    PYTHONPATH=src python examples/continuous_serving.py [--alpha 0.3] [--q 4]
+
+What it shows:
+  * requests with DIFFERENT prompt lengths, output budgets and sampling
+    params (greedy / temperature / top-k) sharing one slotted KV-cache pool;
+  * slot exhaustion queueing and mid-stream admission: more requests than
+    slots, so finished sequences hand their slot to waiting ones;
+  * the greedy-parity contract: a greedy request served under continuous
+    batching emits exactly the tokens the reference ``greedy_generate``
+    produces for that prompt alone;
+  * RSI compression (the paper's Alg 3.1) as a serving lever: the same
+    engine drives the compressed checkpoint.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.core import CompressionPolicy, compress_tree, spectralize_params
+from repro.models.model import build_model
+from repro.serving import Engine, Request, SamplingParams
+from repro.train.serve_step import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--n-slots", type=int, default=3)
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    # simulate pretrained weights (slow-decay spectra) — the paper's regime
+    params = spectralize_params(params, jax.random.PRNGKey(9))
+    if args.alpha > 0:
+        params, _, rep = compress_tree(
+            params, CompressionPolicy(alpha=args.alpha, q=args.q, min_dim=16),
+            jax.random.PRNGKey(1),
+        )
+        print(f"[compress] {rep.summary()}")
+
+    rng = np.random.default_rng(args.seed)
+    max_len = 48
+    reqs = []
+    for i in range(args.n_requests):
+        # mixed workload: even requests greedy, odd requests sampled
+        sp = (
+            SamplingParams()
+            if i % 2 == 0
+            else SamplingParams(temperature=0.8, top_k=40, seed=100 + i)
+        )
+        reqs.append(
+            Request(
+                prompt=rng.integers(0, cfg.vocab, size=(int(rng.integers(4, 17)),)),
+                max_new_tokens=int(rng.integers(6, 20)),
+                sampling=sp,
+            )
+        )
+
+    eng = Engine(model, params, n_slots=args.n_slots, max_len=max_len)
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.tokens) for r in done)
+    print(
+        f"[engine] {len(done)} requests ({args.n_slots} slots), {n_tok} tokens "
+        f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s, {eng.steps} shared decode steps)"
+    )
+    for r in sorted(done, key=lambda r: r.uid):
+        kind = "greedy" if r.sampling.temperature == 0 else (
+            f"T={r.sampling.temperature} k={r.sampling.top_k}"
+        )
+        print(
+            f"  req {r.uid}: prompt {r.prompt.size:2d} -> {len(r.tokens):2d} tokens "
+            f"[{kind:12s}] latency {r.latency*1e3:6.0f}ms  {r.tokens[:8]}"
+        )
+
+    # greedy-parity spot check against the reference decode loop
+    g = next(r for r in done if r.sampling.temperature == 0)
+    ref = np.asarray(
+        greedy_generate(
+            model, params, {"tokens": jnp.asarray(g.prompt[None])},
+            steps=g.max_new_tokens, max_len=max_len,
+        )
+    )[0].tolist()
+    assert g.tokens == ref, (g.tokens, ref)
+    print(f"[parity] request {g.uid} matches greedy_generate exactly: OK")
+
+
+if __name__ == "__main__":
+    main()

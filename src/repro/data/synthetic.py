@@ -10,7 +10,24 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["SyntheticLM", "markov_tokens", "classification_dataset"]
+__all__ = ["SyntheticLM", "markov_tokens", "modality_extras", "classification_dataset"]
+
+
+def modality_extras(cfg, rng) -> dict:
+    """Per-REQUEST (unbatched) modality-frontend stubs for serving: the
+    extra model inputs one request of this arch family needs, drawn from
+    ``rng``.  Shared by the serving benchmark and the engine parity tests so
+    both build identical request payloads."""
+    e = {}
+    if cfg.family == "vlm":
+        e["image_embed"] = rng.standard_normal(
+            (cfg.n_image_tokens, cfg.d_model)
+        ).astype(np.float32)
+    if cfg.family == "audio":
+        e["frames"] = rng.standard_normal(
+            (cfg.n_audio_frames, cfg.d_model)
+        ).astype(np.float32)
+    return e
 
 
 def markov_tokens(seed: int, step: int, batch: int, seq: int, vocab: int) -> np.ndarray:

@@ -1,9 +1,17 @@
-"""Serving launcher: batched prefill + greedy decode, optionally from an
-RSI-compressed checkpoint.
+"""Serving launcher: continuous-batching engine (default) or the legacy
+static batched prefill+decode path, optionally from an RSI-compressed
+checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-        --batch 4 --prompt-len 16 --gen 32 [--compress-alpha 0.3 --q 4] \
-        [--kernels auto|xla|pallas|reference]
+        --batch 4 --prompt-len 16 --gen 32 [--engine continuous|static] \
+        [--n-slots 4] [--temperature 0.7 --top-k 40] \
+        [--compress-alpha 0.3 --q 4] [--kernels auto|xla|pallas|reference]
+
+``--engine continuous`` (default) routes requests through
+``repro.serving.Engine``: a slotted KV-cache pool with FIFO admission,
+padded micro-batch prefill, a shared per-token decode step across all
+active slots, and per-request sampling params.  ``--engine static`` keeps
+the original fixed-shape ``greedy_generate`` path.
 
 Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
 overrides the arch config's ``kernels`` field, and the dispatcher's hit
@@ -21,9 +29,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["continuous", "static"], default="continuous")
+    ap.add_argument("--batch", type=int, default=4, help="number of requests")
+    ap.add_argument("--n-slots", type=int, default=0,
+                    help="cache slots in the pool (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 = softmax sampling (continuous engine)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="0 = full vocab (continuous engine)")
     ap.add_argument("--compress-alpha", type=float, default=0.0)
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
@@ -45,7 +60,6 @@ def main(argv=None):
     from repro.models.model import build_model
     from repro.runtime import dispatch
     from repro.runtime.dispatch import DispatchConfig, use_dispatch
-    from repro.train.serve_step import greedy_generate
 
     cfg = get_arch(args.arch, reduced=args.reduced)
     model = build_model(cfg)
@@ -67,15 +81,52 @@ def main(argv=None):
         else DispatchConfig.from_arch(cfg)
     )
     dispatch.reset_counters()
-    t0 = time.time()
-    with use_dispatch(dcfg):
-        out = greedy_generate(model, params, batch, steps=args.gen, max_len=max_len)
-    out = np.asarray(out)
-    dt = time.time() - t0
-    print(f"generated {out.shape} tokens in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s, params {n0/1e6:.1f}M, "
-          f"kernels={dcfg.backend})")
-    print("first sequences:", out[: min(2, args.batch), :12].tolist())
+
+    if args.engine == "static":
+        from repro.train.serve_step import greedy_generate
+
+        t0 = time.time()
+        with use_dispatch(dcfg):
+            out = greedy_generate(model, params, batch, steps=args.gen, max_len=max_len)
+        out = np.asarray(out)
+        dt = time.time() - t0
+        print(f"[static] generated {out.shape} tokens in {dt:.2f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s, params {n0/1e6:.1f}M, "
+              f"kernels={dcfg.backend})")
+        print("first sequences:", out[: min(2, args.batch), :12].tolist())
+    else:
+        from repro.serving import Engine, Request, SamplingParams
+        from repro.serving.engine import percentile
+
+        n_slots = args.n_slots or args.batch
+        eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg)
+        np_batch = {k: np.asarray(v) for k, v in batch.items()}
+        reqs = []
+        for b in range(args.batch):
+            extras = {k: v[b] for k, v in np_batch.items() if k != "tokens"}
+            # per-request seed: otherwise every request shares one PRNG
+            # stream and sampled continuations are correlated across the batch
+            sp = SamplingParams(
+                temperature=args.temperature, top_k=args.top_k, seed=args.seed + b
+            )
+            reqs.append(Request(
+                prompt=np_batch["tokens"][b], max_new_tokens=args.gen,
+                sampling=sp, extras=extras,
+            ))
+        t0 = time.time()
+        done = eng.run(reqs)
+        dt = time.time() - t0
+        n_tok = sum(len(r.tokens) for r in done)
+        lats = sorted(r.latency for r in done)
+        p50, p95 = percentile(lats, 0.5), percentile(lats, 0.95)
+        print(f"[continuous] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.1f} tok/s, slots={n_slots}, params {n0/1e6:.1f}M, "
+              f"kernels={dcfg.backend})")
+        print(f"latency p50={p50*1e3:.0f}ms p95={p95*1e3:.0f}ms "
+              f"decode_steps={eng.steps}")
+        out = np.asarray([done[0].tokens], np.int32)
+        print("first sequence:", done[0].tokens[:12])
+
     print("[dispatch] per-site kernel paths:")
     print(dispatch.format_counters())
     return out

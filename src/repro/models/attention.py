@@ -28,6 +28,19 @@ from repro.sharding.rules import maybe_constrain
 NEG_INF = -1e30
 
 
+def position_vector(pos, batch: int):
+    """Normalize a decode position to a per-sequence (B,) int32 vector.
+
+    Decode entry points accept either a scalar ``pos`` (the classic
+    fixed-shape path: every sequence sits at the same position) or a (B,)
+    vector (continuous batching: every cache slot advances independently).
+    Both forms route through the SAME vectorized code below, so the static
+    and continuous serving paths stay bit-identical.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos, (batch,)) if pos.ndim == 0 else pos.reshape(batch)
+
+
 # --------------------------------------------------------------------------- #
 # Core chunked attention (training / prefill)
 # --------------------------------------------------------------------------- #
@@ -254,7 +267,11 @@ def chunked_attention(
 
 def decode_attention(q, k_cache, v_cache, n_valid, *, rotate_mask=None):
     """One-token attention over a cache.  q: (B, 1, H, hd); caches
-    (B, S, KV, *).  ``n_valid``: number of valid cache slots (scalar).
+    (B, S, KV, *).  ``n_valid``: number of valid cache slots — a scalar
+    (uniform batch) or a (B,) vector (continuous batching: each slot has
+    its own length).  Masking is STRICTLY per sequence: slot b never
+    attends past ``n_valid[b]``, so ragged-length sequences can coexist in
+    one cache tensor without cross-contamination from stale entries.
     ``rotate_mask`` optionally marks valid slots for ring-buffer caches.
 
     Memory discipline: the cache is NEVER cast — scores use fp32 MXU
@@ -269,7 +286,8 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, rotate_mask=None):
     qh = (q.reshape(B, KV, G, hd).astype(jnp.float32) * hd**-0.5).astype(k_cache.dtype)
     s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
     if rotate_mask is None:
-        valid = jnp.arange(S)[None] < n_valid
+        nv = position_vector(n_valid, B)
+        valid = jnp.arange(S)[None, :] < nv[:, None]
     else:
         valid = rotate_mask
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
@@ -357,20 +375,23 @@ def gqa_init_cache(cfg, batch: int, max_len: int, dtype):
 
 
 def gqa_decode(p, x, cache, pos, cfg):
-    """x: (B, 1, d); pos: scalar int32 absolute position of the new token."""
+    """x: (B, 1, d); pos: absolute position of the new token — scalar int32
+    or a (B,) vector for per-slot positions (continuous batching)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = position_vector(pos, B)
+    positions = pos_v[:, None]
     q, k, v = _qkv(p, x, cfg, positions, rope=True)
     S = cache["k"].shape[1]
-    slot = pos % S  # ring for SWA; identity when S == max_len
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    slot = pos_v % S  # ring for SWA; identity when S == max_len
+    b_idx = jnp.arange(B)
+    k_cache = cache["k"].at[b_idx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[b_idx, slot].set(v[:, 0])
     if cfg.sliding_window is not None and S == cfg.sliding_window:
-        n_valid = jnp.minimum(pos + 1, S)
-        rotate_mask = jnp.broadcast_to(jnp.arange(S)[None] < n_valid, (B, S))
+        n_valid = jnp.minimum(pos_v + 1, S)  # (B,)
+        rotate_mask = jnp.arange(S)[None, :] < n_valid[:, None]
         out = decode_attention(q, k_cache, v_cache, n_valid, rotate_mask=rotate_mask)
     else:
-        out = decode_attention(q, k_cache, v_cache, pos + 1)
+        out = decode_attention(q, k_cache, v_cache, pos_v + 1)
     out = nn.dense(p["wo"], out.reshape(B, 1, -1))
     return out, {"k": k_cache, "v": v_cache}
 
@@ -478,15 +499,18 @@ def mla_init_cache(cfg, batch: int, max_len: int, dtype):
 
 
 def mla_decode(p, x, cache, pos, cfg):
-    """Absorbed-weight MLA decode: attention entirely in latent space."""
+    """Absorbed-weight MLA decode: attention entirely in latent space.
+    ``pos``: scalar or (B,) per-slot positions (continuous batching)."""
     B = x.shape[0]
     H, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     lkv = cfg.kv_lora_rank
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_v = position_vector(pos, B)
+    positions = pos_v[:, None]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope),(B,1,H,rope)
     c_new, kr_new = _mla_latent(p, x, cfg, positions)  # (B,1,lkv),(B,1,rope)
-    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
-    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+    b_idx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[b_idx, pos_v].set(c_new[:, 0])
+    r_cache = cache["k_rope"].at[b_idx, pos_v].set(kr_new[:, 0])
 
     w_kv = p["wkv_b"] if not isinstance(p["wkv_b"], dict) else None
     if w_kv is None:
@@ -511,7 +535,7 @@ def mla_decode(p, x, cache, pos, cfg):
             "bhr,bsr->bhs", q_rope[:, 0], r_cache, preferred_element_type=jnp.float32
         )
     ) * scale
-    valid = jnp.arange(c_cache.shape[1])[None] <= pos
+    valid = jnp.arange(c_cache.shape[1])[None, :] <= pos_v[:, None]
     s = jnp.where(valid[:, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum(

@@ -158,8 +158,12 @@ def encdec_init_cache(cfg, batch_size: int, max_len: int):
     }
 
 
-def encdec_prefill(p, batch, cfg, max_len: int):
-    """Encode frames + run the decoder prompt, building both caches."""
+def encdec_prefill(p, batch, cfg, max_len: int, *, last_index=None):
+    """Encode frames + run the decoder prompt, building both caches.
+
+    ``last_index``: optional (B,) per-sequence index of the last valid
+    prompt token (right-padded ragged micro-batches; see lm_prefill).
+    """
     enc_out = encdec_encode(p, batch["frames"], cfg)
     dtype = jnp.dtype(cfg.dtype)
     tokens = batch["tokens"]
@@ -195,23 +199,27 @@ def encdec_prefill(p, batch, cfg, max_len: int):
 
     x, cache = jax.lax.scan(step, x, p["dec_layers"])
     x = nn.layernorm(p["dec_norm"], x, cfg.norm_eps)
-    logits = nn.dense(p["lm_head"], x[:, -1:]).astype(jnp.float32)[:, 0]
+    if last_index is None:
+        last = x[:, -1:]
+    else:
+        last = x[jnp.arange(B), jnp.asarray(last_index, jnp.int32)][:, None]
+    logits = nn.dense(p["lm_head"], last).astype(jnp.float32)[:, 0]
     return logits, cache
 
 
 def encdec_decode_step(p, cache, tokens, pos, cfg):
+    """``pos``: scalar or (B,) per-slot positions (continuous batching)."""
     dtype = jnp.dtype(cfg.dtype)
     B = tokens.shape[0]
+    pos_v = attn.position_vector(pos, B)
     pe = nn.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model)
-    x = nn.embed_lookup(p["embed"], tokens) + jax.lax.dynamic_slice_in_dim(
-        pe, pos, 1, axis=0
-    )[None].astype(dtype)
+    x = nn.embed_lookup(p["embed"], tokens) + pe[pos_v][:, None].astype(dtype)
 
     def step(carry, inp):
         lp, c = inp
         h = carry
         hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
-        a, c_self = attn.gqa_decode(lp["attn"], hh, c["self"], pos, cfg)
+        a, c_self = attn.gqa_decode(lp["attn"], hh, c["self"], pos_v, cfg)
         h = h + a
         hh = nn.layernorm(lp["cross_norm"], h, cfg.norm_eps)
         kv = (c["cross_kv"]["k"], c["cross_kv"]["v"])

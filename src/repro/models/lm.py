@@ -401,11 +401,18 @@ def _hybrid_shared_positions(cfg):
     return [i for i, s in enumerate(_hybrid_segments(cfg)) if s[1]]
 
 
-def lm_prefill(p, batch, cfg, max_len: int):
+def lm_prefill(p, batch, cfg, max_len: int, *, last_index=None):
     """Run the prompt through the model, building the decode cache.
 
     Returns (last_token_logits (B, Vp), cache).  Implemented as forward with
     per-layer cache capture; scan layers capture stacked caches.
+
+    ``last_index``: optional (B,) int32 — per-sequence index of the LAST
+    valid prompt token.  Right-padded ragged micro-batches (continuous
+    batching) pass this so each sequence's next-token logits come from its
+    own final token rather than the padded tail; causal masking guarantees
+    those logits are unaffected by the padding to the right.  Default
+    (None) keeps the classic fixed-shape behaviour (last column).
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -544,13 +551,18 @@ def lm_prefill(p, batch, cfg, max_len: int):
         raise ValueError(fam)
 
     x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
-    last = x[:, -1:, :]
+    if last_index is None:
+        last = x[:, -1:, :]
+    else:
+        idx = jnp.asarray(last_index, jnp.int32)
+        last = x[jnp.arange(B), idx][:, None, :]
     logits = _logits(p, last, cfg)[:, 0]
     return logits, cache
 
 
 def lm_decode_step(p, cache, tokens, pos, cfg):
-    """tokens: (B, 1) int32; pos: scalar.  Returns (logits (B,Vp), cache)."""
+    """tokens: (B, 1) int32; pos: scalar or (B,) per-slot positions
+    (continuous batching).  Returns (logits (B,Vp), cache)."""
     B = tokens.shape[0]
     x = nn.embed_lookup(p["embed"], tokens)
     fam = cfg.family

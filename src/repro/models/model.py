@@ -26,7 +26,10 @@ class ModelApi:
     init: Callable[[jax.Array], Any]
     forward: Callable[[Any, dict], tuple]  # (params, batch) -> (logits, aux)
     init_cache: Callable[[int, int], Any]  # (batch, max_len) -> cache
-    prefill: Callable[[Any, dict, int], tuple]  # (params, batch, max_len)
+    # (params, batch, max_len, *, last_index=None) — last_index: per-seq
+    # index of the last valid prompt token for right-padded micro-batches
+    prefill: Callable[..., tuple]
+    # (params, cache, tokens, pos) — pos: scalar or (B,) per-slot vector
     decode_step: Callable[[Any, Any, jax.Array, jax.Array], tuple]
     # chunked-loss training path: trunk features + per-chunk head apply
     forward_features: Any = None  # (params, batch) -> (feats (B,S,d), aux)
@@ -40,7 +43,7 @@ def build_model(cfg: ArchConfig) -> ModelApi:
             init=lambda key: ed_mod.encdec_init(key, cfg),
             forward=lambda p, b: ed_mod.encdec_forward(p, b, cfg),
             init_cache=lambda bs, ml: ed_mod.encdec_init_cache(cfg, bs, ml),
-            prefill=lambda p, b, ml: ed_mod.encdec_prefill(p, b, cfg, ml),
+            prefill=lambda p, b, ml, **kw: ed_mod.encdec_prefill(p, b, cfg, ml, **kw),
             decode_step=lambda p, c, t, pos: ed_mod.encdec_decode_step(p, c, t, pos, cfg),
             forward_features=lambda p, b: ed_mod.encdec_forward_features(p, b, cfg),
             head_apply=lambda p, x: ed_mod.encdec_head_apply(p, x, cfg),
@@ -50,7 +53,7 @@ def build_model(cfg: ArchConfig) -> ModelApi:
         init=lambda key: lm_mod.lm_init(key, cfg),
         forward=lambda p, b: lm_mod.lm_forward(p, b, cfg),
         init_cache=lambda bs, ml: lm_mod.lm_init_cache(cfg, bs, ml),
-        prefill=lambda p, b, ml: lm_mod.lm_prefill(p, b, cfg, ml),
+        prefill=lambda p, b, ml, **kw: lm_mod.lm_prefill(p, b, cfg, ml, **kw),
         decode_step=lambda p, c, t, pos: lm_mod.lm_decode_step(p, c, t, pos, cfg),
         forward_features=lambda p, b: lm_mod.lm_forward_features(p, b, cfg),
         head_apply=lambda p, x: lm_mod.lm_head_apply(p, x, cfg),

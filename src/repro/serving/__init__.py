@@ -1,0 +1,20 @@
+"""Continuous-batching serving subsystem.
+
+Public surface:
+  * :class:`Engine` / :class:`Request` — slotted KV-cache pool engine
+  * :class:`SamplingParams` — greedy / temperature / top-k, explicit PRNG
+  * :class:`SlotAllocator` / :class:`Scheduler` — admission control
+"""
+
+from repro.serving.engine import Engine, Request
+from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.scheduler import Scheduler, SlotAllocator
+
+__all__ = [
+    "Engine",
+    "Request",
+    "SamplingParams",
+    "sample_tokens",
+    "Scheduler",
+    "SlotAllocator",
+]

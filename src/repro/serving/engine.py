@@ -1,0 +1,378 @@
+"""Continuous-batching serving engine over a slotted KV-cache pool.
+
+The engine owns ONE batched decode cache of ``n_slots`` rows (the pool) and
+runs an admit -> prefill -> shared-decode loop:
+
+  * requests (prompt tokens, max_new_tokens, sampling params) enter a FIFO
+    queue (:mod:`repro.serving.scheduler`) and are assigned cache slots as
+    slots free up — slot exhaustion queues, it never crashes;
+  * admitted requests are prefilled in right-padded micro-batches (causal
+    masking keeps padded prefill exact for attention families; recurrent
+    families group by exact length because SSM state integrates every input
+    token) and their caches are scattered into the pool rows;
+  * ALL active slots then share a single fixed-shape decode step per token,
+    with per-slot positions threaded through ``decode_attention`` /
+    ``mla_decode`` / SSM state, so variable-length sequences coexist in one
+    cache tensor;
+  * finished sequences free their slot and the oldest waiting request is
+    admitted mid-stream — the decode batch stays full under load.
+
+Kernel backend selection goes through the unified dispatch runtime (PR 1):
+every prefill/decode call runs inside ``use_dispatch``, so ``--kernels``
+applies per engine step exactly as it does to the static path.
+
+Greedy determinism contract: with temperature 0 the engine emits, per
+request, bit-identical tokens to ``serve_step.greedy_generate`` run on that
+prompt alone (tests/test_engine_parity.py) — the scheduler changes WHEN a
+sequence advances, never WHAT it computes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.dispatch import DispatchConfig, use_dispatch
+from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.scheduler import Scheduler, SlotAllocator
+
+__all__ = ["Request", "Engine", "SamplingParams", "percentile"]
+
+
+def percentile(sorted_vals, frac: float):
+    """Nearest-rank percentile of an ascending-sorted sequence.
+
+    The ONE latency-percentile definition shared by the launcher and the
+    serving benchmark, so their reported p50/p95 agree on identical data.
+    """
+    n = len(sorted_vals)
+    if n == 0:
+        raise ValueError("percentile of empty sequence")
+    return sorted_vals[max(0, math.ceil(frac * n) - 1)]
+
+# Families whose decode state integrates every prefill token (recurrent /
+# convolutional state): right-padding would corrupt the carried state, so
+# admission micro-batches group these by EXACT prompt length.
+_EXACT_LEN_FAMILIES = ("ssm", "hybrid")
+
+_SALT_MULT = 1_000_003  # salt = seed * MULT + token_index (mod int32)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its per-request results/latency record."""
+
+    prompt: np.ndarray  # (S,) int32 prompt tokens
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # filled in by the engine:
+    uid: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+    def _salt(self, token_index: int) -> int:
+        return (self.sampling.seed * _SALT_MULT + token_index) & 0x7FFFFFFF
+
+
+def _cache_batch_axis(leaf) -> int:
+    # Pool-cache layout convention (serve_step.cache_specs): the slot/batch
+    # dim is axis 1 on every stacked leaf, except the 6-D VLM self-KV
+    # (G, n_self, B, S, KV, hd) where it is axis 2.
+    return 2 if leaf.ndim == 6 else 1
+
+
+def _scatter_slots(pool, part, slots, n_slots: int):
+    """Write micro-batch cache rows into pool rows ``slots`` (leaf-wise).
+
+    ``part`` may carry MORE rows than ``slots`` (batch-bucketed prefill pads
+    with dummy rows); only the first ``len(slots)`` rows are written.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def leaf(pl, pr):
+        ax = _cache_batch_axis(pl)
+        if pl.shape[ax] != n_slots:  # fail loudly if the layout rule drifts
+            raise ValueError(
+                f"cache leaf {pl.shape} does not carry the slot dim "
+                f"({n_slots}) on axis {ax}; _cache_batch_axis out of date?"
+            )
+        rows = jnp.moveaxis(pr, ax, 0)[: idx.shape[0]]
+        merged = jnp.moveaxis(pl, ax, 0).at[idx].set(rows)
+        return jnp.moveaxis(merged, 0, ax)
+
+    return jax.tree_util.tree_map(leaf, pool, part)
+
+
+def _next_pow2(n: int, floor: int) -> int:
+    v = max(floor, 1)
+    while v < n:
+        v *= 2
+    return v
+
+
+class Engine:
+    """Continuous-batching engine binding (model, params) to a slot pool."""
+
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_slots: int,
+        max_len: int,
+        dispatch: Optional[DispatchConfig] = None,
+        eos_token: Optional[int] = None,
+    ):
+        self.model, self.params = model, params
+        self.cfg = model.cfg
+        self.n_slots, self.max_len = n_slots, max_len
+        self.eos_token = eos_token
+        self._dcfg = dispatch if dispatch is not None else DispatchConfig.from_arch(self.cfg)
+        self.scheduler = Scheduler(SlotAllocator(n_slots))
+
+        with use_dispatch(self._dcfg):
+            self.cache = model.init_cache(n_slots, max_len)
+        self._decode_jit = jax.jit(model.decode_step)
+        self._prefill_jit = jax.jit(
+            lambda p, b, li: model.prefill(p, b, max_len, last_index=li)
+        )
+        # all-greedy fast path: skip the top-k/categorical machinery (two
+        # (B,V) argsorts + B categorical draws) on the per-token hot path
+        self._argmax_jit = jax.jit(lambda l: jnp.argmax(l, axis=-1).astype(jnp.int32))
+        self._base_key = jax.random.PRNGKey(0)
+
+        # per-slot host state (None = slot idle)
+        self._reqs: List[Optional[Request]] = [None] * n_slots
+        self._pos = np.zeros((n_slots,), np.int32)  # next write position
+        self._tokens = np.zeros((n_slots, 1), np.int32)  # last emitted token
+        self._next_uid = 0
+        self.steps = 0  # decode steps executed (for utilization stats)
+
+    # ------------------------------------------------------------------ #
+    # submission / introspection
+    # ------------------------------------------------------------------ #
+    def submit(self, request: Request) -> Request:
+        if request.prompt.size + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({request.prompt.size}) + max_new_tokens "
+                f"({request.max_new_tokens}) exceeds max_len ({self.max_len})"
+            )
+        request.uid = self._next_uid
+        self._next_uid += 1
+        request.t_submit = time.perf_counter()
+        self.scheduler.enqueue(request)
+        return request
+
+    @property
+    def n_active(self) -> int:
+        return self.scheduler.allocator.n_active
+
+    @property
+    def n_waiting(self) -> int:
+        return self.scheduler.n_waiting
+
+    @property
+    def has_work(self) -> bool:
+        return self.n_active > 0 or self.n_waiting > 0
+
+    # ------------------------------------------------------------------ #
+    # admission + prefill
+    # ------------------------------------------------------------------ #
+    def _admission_groups(self, placed):
+        """Split (slot, req) placements into prefill micro-batches."""
+        exact = self.cfg.family in _EXACT_LEN_FAMILIES
+        if not exact and self.cfg.sliding_window is not None and placed:
+            # SWA ring layout rotates by the PADDED length once it exceeds
+            # the window — shorter requests in the pad would land in wrong
+            # ring slots, so fall back to exact-length grouping there.
+            exact = max(req.prompt.size for _, req in placed) > self.cfg.sliding_window
+        if exact:
+            by_len: Dict[int, list] = {}
+            for slot, req in placed:
+                by_len.setdefault(req.prompt.size, []).append((slot, req))
+            return list(by_len.values())
+        return [placed]
+
+    def _prefill_shape(self, n_reqs: int, max_prompt: int):
+        """Bucket the micro-batch shape so live traffic triggers a BOUNDED
+        number of prefill compiles: batch rows up to the next power of two
+        (capped at n_slots, dummy rows are discarded by the scatter), and —
+        for attention families, where last_index makes right-padding exact —
+        prompt length up to the next power of two (capped at max_len and at
+        the sliding window, past which the ring layout forbids padding)."""
+        G = min(_next_pow2(n_reqs, 1), self.n_slots)
+        P = max_prompt
+        if self.cfg.family not in _EXACT_LEN_FAMILIES:
+            cap = self.max_len
+            if self.cfg.sliding_window is not None:
+                cap = min(cap, self.cfg.sliding_window)
+            P = max(max_prompt, min(_next_pow2(max_prompt, 8), cap))
+        return G, P
+
+    def _prefill_group(self, group):
+        slots = [slot for slot, _ in group]
+        reqs = [req for _, req in group]
+        lens = np.array([r.prompt.size for r in reqs], np.int32)
+        G, P = self._prefill_shape(len(reqs), int(lens.max()))
+        toks = np.zeros((G, P), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, : r.prompt.size] = r.prompt
+        last_index = np.zeros((G,), np.int32)
+        last_index[: len(reqs)] = lens - 1
+        batch = {"tokens": jnp.asarray(toks)}
+        for name in reqs[0].extras:
+            rows = [r.extras[name] for r in reqs]
+            rows += [np.zeros_like(rows[0])] * (G - len(reqs))
+            batch[name] = jnp.asarray(np.stack(rows))
+
+        padded_reqs = reqs + [None] * (G - len(reqs))
+        with use_dispatch(self._dcfg):
+            logits, part = self._prefill_jit(self.params, batch, jnp.asarray(last_index))
+            self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
+            first = self._sample(logits, padded_reqs, [0] * G)
+
+        now = time.perf_counter()
+        finished = []
+        for i, (slot, req) in enumerate(group):
+            self._reqs[slot] = req
+            self._pos[slot] = lens[i]
+            self._tokens[slot, 0] = first[i]
+            req.t_first = now
+            req.tokens.append(int(first[i]))
+        for slot, _ in group:
+            done = self._maybe_finish(slot)
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    # ------------------------------------------------------------------ #
+    # sampling / completion
+    # ------------------------------------------------------------------ #
+    def _sample(self, logits, reqs, token_indices):
+        """Sample one token per logits row for the given requests."""
+        if all(r is None or r.sampling.temperature == 0 for r in reqs):
+            return np.asarray(self._argmax_jit(logits))
+        B = logits.shape[0]
+        temps = np.zeros((B,), np.float32)
+        topks = np.zeros((B,), np.int32)
+        salts = np.zeros((B,), np.int32)
+        for i, (req, ti) in enumerate(zip(reqs, token_indices)):
+            if req is None:
+                continue
+            temps[i] = req.sampling.temperature
+            topks[i] = req.sampling.top_k
+            salts[i] = req._salt(ti)
+        out = sample_tokens(
+            logits,
+            self._base_key,
+            jnp.asarray(salts),
+            jnp.asarray(temps),
+            jnp.asarray(topks),
+        )
+        return np.asarray(out)
+
+    def _maybe_finish(self, slot: int) -> Optional[Request]:
+        req = self._reqs[slot]
+        if req is None:
+            return None
+        hit_eos = self.eos_token is not None and req.tokens and req.tokens[-1] == self.eos_token
+        if req.done or hit_eos:
+            req.t_done = time.perf_counter()
+            self._reqs[slot] = None
+            self._pos[slot] = 0
+            self._tokens[slot, 0] = 0
+            self.scheduler.release(slot)
+            return req
+        return None
+
+    # ------------------------------------------------------------------ #
+    # the engine step
+    # ------------------------------------------------------------------ #
+    def step(self) -> List[Request]:
+        """Admit waiting requests, run one shared decode step; returns the
+        requests that finished during this step."""
+        finished: List[Request] = []
+
+        for group in self._admission_groups(self.scheduler.admit()):
+            if group:
+                # requests whose single token came from prefill finish here
+                finished.extend(self._prefill_group(group))
+
+        active = [s for s in range(self.n_slots) if self._reqs[s] is not None]
+        if not active:
+            return finished
+
+        with use_dispatch(self._dcfg):
+            logits, self.cache = self._decode_jit(
+                self.params, self.cache, jnp.asarray(self._tokens), jnp.asarray(self._pos)
+            )
+            nxt = self._sample(
+                logits,
+                self._reqs,
+                [len(r.tokens) if r is not None else 0 for r in self._reqs],
+            )
+        self.steps += 1
+
+        for s in active:
+            req = self._reqs[s]
+            self._pos[s] += 1
+            self._tokens[s, 0] = nxt[s]
+            req.tokens.append(int(nxt[s]))
+            done = self._maybe_finish(s)
+            if done is not None:
+                finished.append(done)
+        return finished
+
+    # ------------------------------------------------------------------ #
+    # convenience drain loop
+    # ------------------------------------------------------------------ #
+    def run(
+        self,
+        requests: Sequence[Request],
+        arrivals: Optional[Sequence[float]] = None,
+    ) -> List[Request]:
+        """Submit ``requests`` (optionally at wall-clock ``arrivals`` offsets,
+        seconds) and step until all complete.  Returns them in finish order."""
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i] if arrivals else 0)
+        t0 = time.perf_counter()
+        pending = list(order)
+        finished: List[Request] = []
+        while pending or self.has_work:
+            now = time.perf_counter() - t0
+            while pending and (arrivals is None or arrivals[pending[0]] <= now):
+                self.submit(requests[pending[0]])
+                pending.pop(0)
+            if not self.has_work:
+                if pending:  # idle until the next arrival
+                    time.sleep(max(0.0, arrivals[pending[0]] - (time.perf_counter() - t0)))
+                continue
+            finished.extend(self.step())
+        return finished

@@ -1,0 +1,72 @@
+"""Token sampling for the serving engine: greedy, temperature, top-k.
+
+All randomness flows through EXPLICIT PRNG keys: a request's sample stream
+is a pure function of (request seed, token index), so a trace replays
+bit-identically regardless of how requests were interleaved across engine
+steps — the sampling analogue of the synthetic-data determinism contract.
+
+``sample_tokens`` is the vectorized per-slot entry point the engine jits:
+each row of the logits batch gets its own (temperature, top_k, salt), so
+greedy and stochastic requests coexist in one decode batch.  temperature 0
+is EXACT argmax — bit-identical to ``greedy_generate``'s token choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingParams", "sample_tokens"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature: 0.0 => greedy (exact argmax); > 0 => softmax sampling.
+    top_k: 0 => full vocabulary; k > 0 => restrict to the k highest logits.
+    seed: PRNG seed for this request's sample stream.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def sample_tokens(logits, base_key, salts, temperature, top_k):
+    """Sample one token per row with per-row sampling params.
+
+    Args:
+      logits: (B, V) fp32 next-token logits.
+      base_key: PRNG key shared by the engine.
+      salts: (B,) int32 per-row fold_in salts — the engine derives them from
+        (request seed, token index), so streams are request-deterministic.
+      temperature: (B,) fp32; rows with 0 take the argmax.
+      top_k: (B,) int32; rows with 0 sample the full vocabulary.
+
+    Returns: (B,) int32 token ids.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    t = jnp.where(temperature > 0, temperature, 1.0).astype(jnp.float32)
+    scaled = logits.astype(jnp.float32) / t[:, None]
+    # per-row top-k mask via double argsort rank (k differs per row, so
+    # lax.top_k's static k doesn't apply)
+    ranks = jnp.argsort(jnp.argsort(-scaled, axis=-1), axis=-1)
+    k_eff = jnp.where(top_k > 0, top_k, V)
+    masked = jnp.where(ranks < k_eff[:, None], scaled, -jnp.inf)
+
+    keys = jax.vmap(lambda s: jax.random.fold_in(base_key, s))(salts)
+    sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

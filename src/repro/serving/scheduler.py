@@ -1,0 +1,90 @@
+"""Slot allocation + request scheduling for the continuous-batching engine.
+
+The engine owns a fixed pool of ``n_slots`` cache slots (rows of the batched
+decode cache).  Requests queue FIFO; whenever a slot frees up, the scheduler
+admits the oldest waiting request.  Slot exhaustion therefore QUEUES work —
+it never errors — and freed slots are recycled immediately, which is what
+keeps the decode batch full under sustained traffic.
+
+Pure host-side bookkeeping: no jax imports, trivially unit-testable
+(tests/test_scheduler.py).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Optional, Tuple
+
+__all__ = ["SlotAllocator", "Scheduler"]
+
+
+class SlotAllocator:
+    """Free-list allocator over ``n_slots`` cache slots.
+
+    ``alloc`` returns the lowest free slot id (deterministic reuse order —
+    important for reproducible traces) or None when exhausted.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))  # stack, lowest id on top
+        self._active = [False] * n_slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def is_active(self, slot: int) -> bool:
+        return self._active[slot]
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._active[slot] = True
+        return slot
+
+    def free(self, slot: int) -> None:
+        if not (0 <= slot < self.n_slots):
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        if not self._active[slot]:
+            raise ValueError(f"double free of slot {slot}")
+        self._active[slot] = False
+        # keep the free list sorted so reuse order stays deterministic
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+
+class Scheduler:
+    """FIFO admission control on top of a :class:`SlotAllocator`.
+
+    ``enqueue`` never blocks; ``admit`` drains the queue into free slots and
+    returns the (slot, request) placements made this round.
+    """
+
+    def __init__(self, allocator: SlotAllocator):
+        self.allocator = allocator
+        self.queue: Deque = collections.deque()
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.queue)
+
+    def enqueue(self, request) -> None:
+        self.queue.append(request)
+
+    def admit(self) -> List[Tuple[int, object]]:
+        placed = []
+        while self.queue and self.allocator.n_free:
+            slot = self.allocator.alloc()
+            placed.append((slot, self.queue.popleft()))
+        return placed
+
+    def release(self, slot: int) -> None:
+        self.allocator.free(slot)

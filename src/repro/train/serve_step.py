@@ -79,7 +79,13 @@ def cache_specs(cache, rules: MeshRules):
 
 
 def greedy_generate(model, params, batch, *, steps: int, max_len: int):
-    """Reference batched greedy decoding loop (examples/serving)."""
+    """Reference batched greedy decoding loop (examples/serving).
+
+    This fixed-shape loop is the PARITY ORACLE for the continuous-batching
+    engine: ``repro.serving.Engine`` must emit, per greedy request, exactly
+    these tokens for that prompt alone (tests/test_engine_parity.py), so
+    changes here are semantic changes to the serving contract.
+    """
     logits, cache = model.prefill(params, batch, max_len)
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     start = batch["tokens"].shape[1]

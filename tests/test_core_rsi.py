@@ -145,6 +145,87 @@ def test_compress_tree_end_to_end_quality():
     assert outs[4] < outs[1] * 0.8, outs
 
 
+# --------------------------------------------------------------------------- #
+# property tests: Alg 3.1 error monotonicity + factored-form consistency.
+# hypothesis-driven where the optional dep is installed (importorskip idiom,
+# cf. test_bounds); a deterministic seed sweep keeps the properties covered
+# in minimal environments.
+# --------------------------------------------------------------------------- #
+def _rsi_fro_err(W, k, q, key, **kw):
+    res = rsi(W, k, q, key, **kw)
+    approx = (res.U * res.S[None, :]) @ res.Vt
+    return float(jnp.linalg.norm(W - approx))
+
+
+def _check_q_and_oversample_monotone(seed):
+    """Shared property body: on a slow-decay matrix, RSI approximation error
+    is non-increasing in power iterations q (same sketch) and in
+    oversampling; rsi_factors' A @ B reproduces rsi's U S V^T."""
+    C, D, k = 96, 160, 16
+    W = synth_spectrum_matrix(jax.random.PRNGKey(seed), C, D, vgg_like_spectrum(C))
+    key = jax.random.PRNGKey(seed + 1)
+    errs = {q: _rsi_fro_err(W, k, q, key) for q in (1, 2, 4)}
+    # same Omega, more power iterations: never (materially) worse
+    assert errs[2] <= errs[1] * 1.02 + 1e-6, errs
+    assert errs[4] <= errs[2] * 1.02 + 1e-6, errs
+    # oversampling enlarges the sketch subspace: never (materially) worse
+    e_plain = _rsi_fro_err(W, k, 2, key)
+    e_over = _rsi_fro_err(W, k, 2, key, oversample=8)
+    assert e_over <= e_plain * 1.02 + 1e-6, (e_plain, e_over)
+    # factored form A @ B == U diag(S) V^T to numerical tolerance
+    A, B = rsi_factors(W, k, 2, key)
+    res = rsi(W, k, 2, key)
+    np.testing.assert_allclose(
+        np.asarray(A @ B),
+        np.asarray((res.U * res.S[None, :]) @ res.Vt),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_rsi_error_monotonicity_properties(seed):
+    _check_q_and_oversample_monotone(seed)
+
+
+try:  # hypothesis property sweep where the optional dep is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_rsi_error_monotonicity_property_sweep(seed):
+        _check_q_and_oversample_monotone(seed)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        k=st.integers(4, 32),
+        q=st.integers(1, 4),
+    )
+    def test_rsi_factors_reconstruction_property(seed, k, q):
+        """For arbitrary (seed, rank, q): the paper's factored form A @ B
+        matches the full U diag(S) V^T reconstruction to tolerance."""
+        C, D = 64, 96
+        W = synth_spectrum_matrix(
+            jax.random.PRNGKey(seed), C, D, vgg_like_spectrum(C)
+        )
+        A, B = rsi_factors(W, k, q, jax.random.PRNGKey(seed + 1))
+        res = rsi(W, k, q, jax.random.PRNGKey(seed + 1))
+        assert A.shape == (C, k) and B.shape == (k, D)
+        np.testing.assert_allclose(
+            np.asarray(A @ B),
+            np.asarray((res.U * res.S[None, :]) @ res.Vt),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+
 def test_compress_tree_energy_rule():
     key = jax.random.PRNGKey(0)
     # sharp spectrum: energy rule should pick a tiny rank

@@ -129,6 +129,47 @@ if HAVE_HYPOTHESIS:
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_n_valid(dtype):
+    """Regression: ``decode_attention`` masks strictly by PER-SEQUENCE
+    n_valid.  Sequences of different lengths share one cache tensor; stale
+    garbage beyond each sequence's n_valid must never leak into its output
+    (the continuous-batching invariant)."""
+    from repro.models.attention import decode_attention
+
+    B, S, KV, G, hd = 3, 12, 2, 2, 16
+    H = KV * G
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (B, 1, H, hd), dtype)
+    k = _rand(ks[1], (B, S, KV, hd), dtype)
+    v = _rand(ks[2], (B, S, KV, hd), dtype)
+    n_valid = jnp.array([3, 12, 7], jnp.int32)
+
+    # poison every slot past each sequence's n_valid with huge values: if the
+    # mask were batch-wide (or off by one), the softmax would latch onto them
+    tail = jnp.arange(S)[None, :, None, None] >= n_valid[:, None, None, None]
+    k_poison = jnp.where(tail, jnp.asarray(1e4, dtype), k)
+    v_poison = jnp.where(tail, jnp.asarray(1e4, dtype), v)
+
+    got = decode_attention(q, k_poison, v_poison, n_valid)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    # per-sequence reference: each row attends over ONLY its valid prefix
+    for b in range(B):
+        nb = int(n_valid[b])
+        want = decode_attention(
+            q[b : b + 1], k[b : b + 1, :nb], v[b : b + 1, :nb], nb
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[b : b + 1], np.float32),
+            np.asarray(want, np.float32),
+            **TOL[dtype],
+        )
+    # scalar n_valid (the classic fixed-shape path) still broadcasts
+    uniform = decode_attention(q, k, v, 5)
+    uniform_vec = decode_attention(q, k, v, jnp.full((B,), 5, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(uniform), np.asarray(uniform_vec))
+
+
 def test_kernel_flops_match_roofline_model():
     """rsi_flops bookkeeping consistency (used by the benchmark layer)."""
     from repro.core.rsi import rsi_flops

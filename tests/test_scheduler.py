@@ -1,0 +1,140 @@
+"""Unit tests for the serving slot allocator / scheduler, plus engine-level
+slot-lifecycle properties (exhaustion queues, reuse, no cache leakage)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import Scheduler, SlotAllocator
+
+
+# --------------------------------------------------------------------------- #
+# SlotAllocator
+# --------------------------------------------------------------------------- #
+def test_allocator_exhaustion_returns_none():
+    a = SlotAllocator(2)
+    assert a.alloc() == 0 and a.alloc() == 1
+    assert a.alloc() is None  # exhaustion is a soft condition, not an error
+    assert a.n_free == 0 and a.n_active == 2
+
+
+def test_allocator_free_and_reuse_lowest_first():
+    a = SlotAllocator(3)
+    s = [a.alloc() for _ in range(3)]
+    assert s == [0, 1, 2]
+    a.free(1)
+    a.free(0)
+    # deterministic reuse order: lowest free id first
+    assert a.alloc() == 0
+    assert a.alloc() == 1
+    assert a.alloc() is None
+
+
+def test_allocator_double_free_rejected():
+    a = SlotAllocator(2)
+    slot = a.alloc()
+    a.free(slot)
+    with pytest.raises(ValueError):
+        a.free(slot)
+    with pytest.raises(ValueError):
+        a.free(99)
+
+
+def test_allocator_bad_size_rejected():
+    with pytest.raises(ValueError):
+        SlotAllocator(0)
+
+
+# --------------------------------------------------------------------------- #
+# Scheduler
+# --------------------------------------------------------------------------- #
+def test_scheduler_fifo_admission_and_queueing():
+    sched = Scheduler(SlotAllocator(2))
+    for name in ("a", "b", "c", "d"):
+        sched.enqueue(name)
+    placed = sched.admit()
+    assert [(s, r) for s, r in placed] == [(0, "a"), (1, "b")]
+    assert sched.n_waiting == 2  # exhaustion queues rather than crashes
+    assert sched.admit() == []  # no free slots -> nothing admitted
+    sched.release(0)
+    assert sched.admit() == [(0, "c")]  # freed slot reused, FIFO order kept
+    sched.release(1)
+    sched.release(0)
+    assert sched.admit() == [(0, "d")]
+    assert sched.n_waiting == 0
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level slot lifecycle
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_exhaustion_queues_and_drains(small_model):
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+    eng = Engine(model, params, n_slots=2, max_len=16)
+    reqs = [
+        eng.submit(
+            Request(
+                prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+                max_new_tokens=3,
+            )
+        )
+        for _ in range(5)
+    ]
+    assert eng.n_waiting == 5  # nothing admitted until step()
+    eng.step()
+    assert eng.n_active == 2 and eng.n_waiting == 3
+    while eng.has_work:
+        eng.step()
+    assert all(len(r.tokens) == 3 for r in reqs)
+    assert eng.n_active == 0 and eng.n_waiting == 0
+    # all slots returned to the pool
+    assert eng.scheduler.allocator.n_free == 2
+
+
+def test_engine_no_cross_slot_leakage_after_reuse(small_model):
+    """A request admitted into a RECYCLED slot must produce exactly what it
+    produces in a fresh engine: the previous occupant's cache rows are fully
+    overwritten at admission."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(3)
+    pa = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+
+    fresh = Engine(model, params, n_slots=1, max_len=16)
+    solo = fresh.submit(Request(prompt=pb, max_new_tokens=6))
+    while fresh.has_work:
+        fresh.step()
+
+    eng = Engine(model, params, n_slots=1, max_len=16)
+    first = eng.submit(Request(prompt=pa, max_new_tokens=7))
+    reused = eng.submit(Request(prompt=pb, max_new_tokens=6))
+    while eng.has_work:
+        eng.step()
+    assert len(first.tokens) == 7
+    # same single slot, second occupant: identical to the solo run
+    assert reused.tokens == solo.tokens
+
+
+def test_engine_rejects_oversized_request(small_model):
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    eng = Engine(model, params, n_slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=np.arange(6, dtype=np.int32), max_new_tokens=4))
