@@ -12,18 +12,31 @@ dense) every linear in the compiled program actually took.
 
 ``--trace poisson`` replays a Poisson arrival trace through the continuous-
 batching engine (repro.serving.Engine): requests with random prompt/output
-lengths arrive at ``--rate`` req/s, queue for cache slots, and share decode
-steps; the row reports tok/s plus p50/p95 request latency.  ``--arch``
-takes a comma list so one invocation can cover several reduced archs.
+lengths arrive at ``--rate`` req/s, queue for cache slots, and share FUSED
+decode blocks (``--decode-block`` tokens per host round-trip); the row
+reports tok/s, p50/p95 request latency, mean ttft, tokens-per-host-sync,
+and decode-batch utilization (emitted tokens / executed decode-step rows) —
+the two columns that make the fused-loop win visible in the CI artifact.
+``--arch`` takes a comma list so one invocation can cover several reduced
+archs.
+
+``--json BENCH_serving.json`` additionally writes the trace rows as a JSON
+result document, and ``--check-baseline benchmarks/baselines/
+BENCH_serving.json --tolerance 0.5`` compares tok/s and utilization against
+a checked-in baseline, exiting non-zero on regression (the CI perf-smoke
+step).
 
     PYTHONPATH=src python benchmarks/serving.py [--sweep-backends]
     PYTHONPATH=src python benchmarks/serving.py --trace poisson \
         --arch llama3.2-1b,mamba2-130m --rate 20 --n-requests 16 \
-        [--csv serving_trace.csv]
+        [--csv serving_trace.csv] [--json BENCH_serving.json] \
+        [--check-baseline benchmarks/baselines/BENCH_serving.json]
 """
 
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import jax
@@ -159,15 +172,25 @@ def run_trace(
     seed: int = 0,
     alpha: float = 0.0,
     q: int = 4,
+    decode_block: int = 8,
+    warmup: bool = True,
 ):
     """Replay a Poisson arrival trace through the continuous engine.
 
     One row per arch: tok/s over the busy window plus p50/p95 request
-    latency (submit -> final token) and mean time-to-first-token.  Arrival
-    times are exponential inter-arrivals at ``rate`` req/s; prompt and
-    output lengths are uniform over the given ranges — so the trace
-    exercises ragged admission, slot exhaustion queueing, and mid-stream
-    slot reuse rather than one synchronized batch.
+    latency (submit -> final token), mean time-to-first-token, tokens per
+    host sync (``decode_block`` amortization), and decode-batch utilization
+    (emitted tokens / executed decode-step rows).  Arrival times are
+    exponential inter-arrivals at ``rate`` req/s; prompt and output lengths
+    are uniform over the given ranges — so the trace exercises ragged
+    admission, slot exhaustion queueing, and mid-stream slot reuse rather
+    than one synchronized batch.
+
+    ``warmup`` (default on) replays two throwaway requests through the SAME
+    engine before the clock starts, so the row measures steady-state
+    serving throughput rather than jit compile time (which on the reduced
+    CPU configs is seconds — an order of magnitude more than the decode
+    work itself, and identical across engine designs).
     """
     from repro.data.synthetic import modality_extras
     from repro.serving import Engine, Request, SamplingParams
@@ -196,7 +219,42 @@ def run_trace(
                     extras=modality_extras(cfg, rng),
                 )
             )
-        eng = Engine(model, params, n_slots=n_slots, max_len=max_len)
+        eng = Engine(
+            model, params, n_slots=n_slots, max_len=max_len, decode_block=decode_block
+        )
+        if warmup:
+            # Compile OUTSIDE the clock.  Admission buckets micro-batch
+            # shapes (rows to the next power of two capped at n_slots,
+            # prompt lengths to power-of-two buckets — or the EXACT length
+            # for recurrent families), so replaying every distinct prompt
+            # length the trace will actually use, at every reachable group
+            # size (powers of two below n_slots, plus the n_slots cap
+            # itself, which is the admitted group size under saturation
+            # even when n_slots is not a power of two), hits every prefill
+            # program plus the fused decode block.  The timed replay then
+            # measures serving, not XLA.
+            wrng = np.random.default_rng(seed + 1)
+            wsp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed)
+            lens = sorted({r.prompt.size for r in reqs})
+            gs, g = [], 1
+            while g < n_slots:
+                gs.append(g)
+                g *= 2
+            gs.append(n_slots)
+            for g in gs:
+                for n in lens:
+                    eng.run(
+                        [
+                            Request(
+                                prompt=wrng.integers(0, cfg.vocab, size=(int(n),)),
+                                max_new_tokens=2,
+                                sampling=wsp,
+                                extras=modality_extras(cfg, wrng),
+                            )
+                            for _ in range(g)
+                        ]
+                    )
+            eng.steps = eng.host_syncs = eng.decoded_tokens = 0
         t0 = time.perf_counter()
         done = eng.run(reqs, arrivals=arrivals)
         dt = time.perf_counter() - t0
@@ -208,6 +266,7 @@ def run_trace(
         rows.append(
             dict(
                 name=f"trace={arch}",
+                arch=arch,
                 seconds=dt,
                 tok_s=n_tok / dt,
                 p50_ms=p50 * 1e3,
@@ -215,9 +274,68 @@ def run_trace(
                 ttft_ms=ttft * 1e3,
                 n_requests=n_requests,
                 decode_steps=eng.steps,
+                host_syncs=eng.host_syncs,
+                tok_per_sync=eng.tokens_per_sync,
+                util=eng.batch_utilization,
             )
         )
     return rows
+
+
+def write_json(rows, json_path, *, config=None):
+    """Write trace rows as the BENCH_serving.json result document."""
+    doc = {
+        "kind": "poisson_trace",
+        "config": config or {},
+        "rows": {
+            r["arch"]: {
+                k: r[k]
+                for k in (
+                    "tok_s", "p50_ms", "p95_ms", "ttft_ms",
+                    "n_requests", "decode_steps", "host_syncs",
+                    "tok_per_sync", "util",
+                )
+            }
+            for r in rows
+            if "arch" in r
+        },
+    }
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def check_baseline(rows, baseline_path, *, tolerance: float) -> int:
+    """Compare trace rows to a checked-in baseline; return #regressions.
+
+    tok/s regresses if current < baseline * (1 - tolerance); decode-batch
+    utilization likewise.  Throughput on shared CI runners is noisy, so the
+    tolerance is deliberately generous — the gate exists to catch the
+    "decode got order-of-magnitude slower / the batch went idle" class of
+    regression, not 5% drift.  Archs missing from the baseline are skipped
+    with a note (so adding an arch to the trace never breaks CI).
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)["rows"]
+    failures = 0
+    for r in rows:
+        arch = r.get("arch")
+        if arch is None:
+            continue
+        if arch not in base:
+            print(f"[perf-smoke] {arch}: no baseline entry, skipping")
+            continue
+        for metric in ("tok_s", "util"):
+            floor = base[arch][metric] * (1.0 - tolerance)
+            ok = r[metric] >= floor
+            print(
+                f"[perf-smoke] {arch} {metric}: current={r[metric]:.3f} "
+                f"baseline={base[arch][metric]:.3f} floor={floor:.3f} "
+                f"{'OK' if ok else 'REGRESSION'}"
+            )
+            failures += 0 if ok else 1
+    return failures
 
 
 def emit_csv(rows, csv_path=None):
@@ -228,7 +346,9 @@ def emit_csv(rows, csv_path=None):
                 f"serving/{r['name']},{r['seconds']*1e6:.0f},"
                 f"tok_s={r['tok_s']:.1f};p50_ms={r['p50_ms']:.0f};"
                 f"p95_ms={r['p95_ms']:.0f};ttft_ms={r['ttft_ms']:.0f};"
-                f"n_req={r['n_requests']};decode_steps={r['decode_steps']}"
+                f"n_req={r['n_requests']};decode_steps={r['decode_steps']};"
+                f"host_syncs={r['host_syncs']};"
+                f"tok_per_sync={r['tok_per_sync']:.1f};util={r['util']:.3f}"
             )
         else:
             extra = f";hits={r['hits']}" if "hits" in r else ""
@@ -267,12 +387,28 @@ if __name__ == "__main__":
     ap.add_argument("--rate", type=float, default=20.0, help="req/s (trace mode)")
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode tokens per host round-trip (trace mode)")
+    ap.add_argument("--prompt-range", default="4,16",
+                    help="min,max prompt tokens (trace mode)")
+    ap.add_argument("--gen-range", default="4,16",
+                    help="min,max generated tokens (trace mode)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="include jit compile time in the trace row")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=0.0,
                     help="RSI compression alpha (0 = dense) for trace mode")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--csv", default=None, help="also write rows to this CSV file")
+    ap.add_argument("--json", default=None,
+                    help="write trace rows to this JSON file (BENCH_serving.json)")
+    ap.add_argument("--check-baseline", default=None,
+                    help="baseline BENCH_serving.json to compare against; "
+                    "exits non-zero if tok/s or utilization regresses")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed relative drop vs the baseline (CI runners "
+                    "are noisy; this gates collapses, not drift)")
     args = ap.parse_args()
     if args.trace == "poisson":
         rows = run_trace(
@@ -284,9 +420,31 @@ if __name__ == "__main__":
             top_k=args.top_k,
             seed=args.seed,
             alpha=args.alpha,
+            decode_block=args.decode_block,
+            prompt_range=tuple(int(x) for x in args.prompt_range.split(",")),
+            gen_range=tuple(int(x) for x in args.gen_range.split(",")),
+            warmup=not args.no_warmup,
         )
     elif args.sweep_backends:
         rows = run_backend_sweep()
     else:
         rows = run()
     emit_csv(rows, csv_path=args.csv)
+    if args.json:
+        if args.trace != "poisson":
+            raise SystemExit("--json applies to --trace poisson rows")
+        write_json(
+            rows,
+            args.json,
+            config=dict(
+                rate=args.rate, n_requests=args.n_requests, n_slots=args.n_slots,
+                decode_block=args.decode_block, seed=args.seed, alpha=args.alpha,
+                prompt_range=args.prompt_range, gen_range=args.gen_range,
+            ),
+        )
+    if args.check_baseline:
+        if args.trace != "poisson":
+            raise SystemExit("--check-baseline applies to --trace poisson rows")
+        n_bad = check_baseline(rows, args.check_baseline, tolerance=args.tolerance)
+        if n_bad:
+            sys.exit(f"[perf-smoke] {n_bad} metric(s) regressed beyond tolerance")

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash-decode — one-token GQA attention over a KV cache.
+
+The serving decode hot path: every active slot attends its single new query
+against its whole cache row.  The kernel streams the cache's SEQUENCE dim
+through VMEM in blocks (split-KV online softmax: running (m, l, acc) live in
+scratch across the sequential grid axis), so no (B, H, S) score tensor is
+ever materialized and the cache itself is never copied or transposed — the
+BlockSpec index maps read (bs, hd) tiles straight out of the (B, S, KV, hd)
+pool layout.
+
+GQA-aware tiling: the grid is (B, KV, S/bs) and each program computes all
+``G = H // KV`` query heads that share one KV head, so the (G, hd) @
+(hd, bs) score matmul feeds the MXU one tile per KV head instead of
+re-reading K per query head.
+
+Masking is STRICT per slot: a ``valid`` (B, S) mask (built by the caller
+from per-slot ``n_valid`` or a ring-buffer ``rotate_mask``) gates both the
+scores and the probabilities.  Fully-masked rows — empty or inactive slots
+in the continuous-batching pool — produce ZEROS, not NaN: probabilities are
+re-masked after the exp so the running denominator stays 0 (``exp(s - m)``
+alone would be 1 on all-masked rows where m == NEG_INF).
+
+The dense einsum in kernels/ref.decode_attention_ref (wrapped by
+models/attention.decode_attention) is the parity oracle; backend selection
+lives in runtime/dispatch.py like every other op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel", "decode_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def decode_attention_kernel(
+    q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, n_s: int
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (G, hd)
+    k = k_ref[0, :, 0, :]  # (bs, hd)
+    v = v_ref[0, :, 0, :]  # (bs, vd)
+    live = valid_ref[0] != 0  # (bs,)
+
+    # Same dtype discipline as the reference: scale in fp32, cast back to the
+    # cache dtype, accumulate scores in fp32 on the MXU.
+    qs = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    s = jnp.dot(qs, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+    s = jnp.where(live[None, :], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # exp(s - m) is 1, not 0, on fully-masked rows (m == NEG_INF); re-masking
+    # keeps l at 0 there so empty slots flush to zeros instead of NaN.
+    p = jnp.where(live[None, :], jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_s - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_cache: jax.Array,  # (B, S, KV, hd)
+    v_cache: jax.Array,  # (B, S, KV, vd)
+    valid: jax.Array,  # (B, S) bool — per-slot cache validity mask
+    *,
+    bs: int = 512,
+    interpret: bool = False,
+):
+    B, one, H, hd = q.shape
+    if one != 1:
+        raise ValueError(f"decode query must be one token, got q {q.shape}")
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    vd = v_cache.shape[-1]
+    if H % KV:
+        raise ValueError(f"H={H} not a multiple of KV={KV}")
+    if valid.shape != (B, S):
+        raise ValueError(f"valid mask {valid.shape} != (B, S)=({B}, {S})")
+    G = H // KV
+    bs_ = min(bs, S)
+    while S % bs_:
+        bs_ //= 2
+    qg = q.reshape(B, KV, G, hd)
+    valid_i = valid.astype(jnp.int32)
+    grid = (B, KV, S // bs_)
+
+    out = pl.pallas_call(
+        functools.partial(decode_attention_kernel, scale=hd**-0.5, n_s=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, j: (b, k, 0, 0)),
+            pl.BlockSpec((1, bs_, 1, hd), lambda b, k, j: (b, j, k, 0)),
+            pl.BlockSpec((1, bs_, 1, vd), lambda b, k, j: (b, j, k, 0)),
+            pl.BlockSpec((1, bs_), lambda b, k, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, vd), lambda b, k, j: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid_i)
+    return out.reshape(B, 1, H, vd)

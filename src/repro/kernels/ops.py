@@ -16,7 +16,13 @@ import jax
 
 from repro.runtime import dispatch as _dispatch
 
-__all__ = ["lowrank_matmul", "sketch_matmul", "ssd_scan", "flash_attention"]
+__all__ = [
+    "lowrank_matmul",
+    "sketch_matmul",
+    "ssd_scan",
+    "flash_attention",
+    "decode_attention",
+]
 
 
 def sketch_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -41,3 +47,11 @@ def ssd_scan(x, dt, B_in, C_in, A, *, chunk: int = 128):
 def flash_attention(q, k, v, *, causal: bool = True):
     """Forward-only flash attention (prefill hot path)."""
     return _dispatch.flash_attention(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, valid):
+    """One-token GQA attention over a KV cache (serving decode hot path).
+
+    valid: (B, S) bool strict per-slot mask; fully-masked rows yield zeros.
+    """
+    return _dispatch.decode_attention(q, k_cache, v_cache, valid)

@@ -45,6 +45,42 @@ def ssd_scan_ref(xbar, dt, B_in, C_in, A):
     return ys.swapaxes(0, 1).astype(xbar.dtype), state
 
 
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """Dense one-token GQA attention over a cache — flash-decode oracle.
+
+    q: (B, 1, H, hd); k_cache: (B, S, KV, hd); v_cache: (B, S, KV, vd);
+    valid: (B, S) bool per-slot cache validity (strict: slot b never attends
+    a position where valid[b] is False).
+
+    Numerically this IS the masked softmax ``jax.nn.softmax`` computes —
+    bit-identical on every row with at least one valid position (masked
+    entries underflow to exactly 0 either way) — except that fully-masked
+    rows (empty/inactive slots in the continuous-batching pool) produce
+    ZEROS instead of attending uniformly over garbage: probabilities are
+    re-masked after the exp, so the denominator stays 0 and is clamped.
+
+    Memory discipline: the cache is NEVER cast — scores use fp32 MXU
+    accumulation via preferred_element_type (an astype would materialize a
+    fp32 copy of the whole multi-GB cache).
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qh = (q.reshape(B, KV, G, hd).astype(jnp.float32) * hd**-0.5).astype(k_cache.dtype)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum(
+        "bkgs,bskv->bkgv",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Plain softmax attention oracle.  q/k/v: (B, S, H, hd) (same H)."""
     B, S, H, hd = q.shape

@@ -4,14 +4,16 @@ checkpoint.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --batch 4 --prompt-len 16 --gen 32 [--engine continuous|static] \
-        [--n-slots 4] [--temperature 0.7 --top-k 40] \
+        [--n-slots 4] [--decode-block 8] [--temperature 0.7 --top-k 40] \
         [--compress-alpha 0.3 --q 4] [--kernels auto|xla|pallas|reference]
 
 ``--engine continuous`` (default) routes requests through
 ``repro.serving.Engine``: a slotted KV-cache pool with FIFO admission,
-padded micro-batch prefill, a shared per-token decode step across all
-active slots, and per-request sampling params.  ``--engine static`` keeps
-the original fixed-shape ``greedy_generate`` path.
+padded micro-batch prefill, a device-resident FUSED decode loop
+(``--decode-block`` tokens per host round-trip, sampling and stop
+detection on device, KV pool donated through the step), and per-request
+sampling params.  ``--engine static`` keeps the original fixed-shape
+``greedy_generate`` path.
 
 Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
 overrides the arch config's ``kernels`` field, and the dispatcher's hit
@@ -33,6 +35,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4, help="number of requests")
     ap.add_argument("--n-slots", type=int, default=0,
                     help="cache slots in the pool (default: --batch)")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode tokens per host round-trip (continuous engine)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -99,7 +103,8 @@ def main(argv=None):
         from repro.serving.engine import percentile
 
         n_slots = args.n_slots or args.batch
-        eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg)
+        eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg,
+                     decode_block=args.decode_block)
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -123,7 +128,9 @@ def main(argv=None):
               f"({n_tok / dt:.1f} tok/s, slots={n_slots}, params {n0/1e6:.1f}M, "
               f"kernels={dcfg.backend})")
         print(f"latency p50={p50*1e3:.0f}ms p95={p95*1e3:.0f}ms "
-              f"decode_steps={eng.steps}")
+              f"decode_steps={eng.steps} host_syncs={eng.host_syncs} "
+              f"tok_per_sync={eng.tokens_per_sync:.1f} "
+              f"util={eng.batch_utilization:.3f}")
         out = np.asarray([done[0].tokens], np.int32)
         print("first sequence:", done[0].tokens[:12])
 

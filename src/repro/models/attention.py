@@ -273,32 +273,30 @@ def decode_attention(q, k_cache, v_cache, n_valid, *, rotate_mask=None):
     attends past ``n_valid[b]``, so ragged-length sequences can coexist in
     one cache tensor without cross-contamination from stale entries.
     ``rotate_mask`` optionally marks valid slots for ring-buffer caches.
+    A fully-masked row (an empty/inactive slot in the continuous-batching
+    pool: all-False ``rotate_mask`` or ``n_valid == 0``) produces ZEROS —
+    never NaN and never a uniform average over stale cache garbage.
 
-    Memory discipline: the cache is NEVER cast — scores use fp32 MXU
-    accumulation via preferred_element_type (an astype here would
-    materialize a fp32 copy of the whole multi-GB cache).  The cache's
-    sequence dim is sharded over "model" (see serve_step.cache_specs);
-    the softmax over the sharded axis lowers to two tiny stat all-reduces
-    (flash-decode style) under the SPMD partitioner."""
-    B, _, H, hd = q.shape
-    S, KV = k_cache.shape[1], k_cache.shape[2]
-    G = H // KV
-    qh = (q.reshape(B, KV, G, hd).astype(jnp.float32) * hd**-0.5).astype(k_cache.dtype)
-    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache, preferred_element_type=jnp.float32)
+    Execution goes through the unified dispatch runtime like the low-rank
+    matmuls: the Pallas flash-decode kernel (kernels/decode_attention.py —
+    split-KV online softmax, GQA tiling, zero cache copies) on TPU for deep
+    caches, the dense einsum oracle (kernels/ref.decode_attention_ref)
+    elsewhere.  Both paths keep the cache in its storage dtype with fp32
+    MXU accumulation — an astype here would materialize a fp32 copy of the
+    whole multi-GB cache.  The cache's sequence dim is sharded over "model"
+    (see serve_step.cache_specs); on the XLA path the softmax over the
+    sharded axis lowers to two tiny stat all-reduces under the SPMD
+    partitioner."""
+    from repro.runtime import dispatch
+
+    B = q.shape[0]
+    S = k_cache.shape[1]
     if rotate_mask is None:
         nv = position_vector(n_valid, B)
         valid = jnp.arange(S)[None, :] < nv[:, None]
     else:
         valid = rotate_mask
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum(
-        "bkgs,bskv->bkgv",
-        p.astype(v_cache.dtype),
-        v_cache,
-        preferred_element_type=jnp.float32,
-    )
-    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+    return dispatch.decode_attention(q, k_cache, v_cache, valid)
 
 
 # --------------------------------------------------------------------------- #

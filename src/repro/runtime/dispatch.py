@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lowrank_matmul import (
     DEFAULT_VMEM_LIMIT,
@@ -57,11 +58,13 @@ __all__ = [
     "active_dispatch",
     "use_dispatch",
     "choose_lowrank_path",
+    "choose_decode_path",
     "lowrank_apply",
     "dense_apply",
     "sketch_matmul",
     "ssd_scan",
     "flash_attention",
+    "decode_attention",
     "counters",
     "counters_by_path",
     "reset_counters",
@@ -69,7 +72,18 @@ __all__ = [
 ]
 
 BACKENDS = ("auto", "xla", "pallas", "reference")
-OPS = ("dense", "lowrank_matmul", "sketch_matmul", "ssd_scan", "flash_attention")
+OPS = (
+    "dense",
+    "lowrank_matmul",
+    "sketch_matmul",
+    "ssd_scan",
+    "flash_attention",
+    "decode_attention",
+)
+
+# auto table: below this cache depth the flash-decode kernel's grid overhead
+# exceeds what the dense einsum costs, so short caches stay on XLA
+DECODE_MIN_SEQ = 128
 
 # low-rank execution paths (what the auto table chooses between)
 PATH_DENSE = "dense"  # materialize A @ B once, single GEMM (rank >= break-even)
@@ -364,3 +378,51 @@ def flash_attention(q, k, v, *, causal: bool = True):
         )
     _record("flash_attention", "xla", (q.shape, causal))
     return _ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def choose_decode_path(
+    q_shape,
+    kv_shape,
+    *,
+    config: Optional[DispatchConfig] = None,
+    platform: Optional[str] = None,
+) -> str:
+    """Auto table for one-token decode attention: "pallas" or "xla".
+
+    Like ``choose_lowrank_path`` this is a pure trace-time decision over
+    static shapes and platform: the flash-decode kernel wins on TPU once the
+    cache is deep enough to amortize its grid (DECODE_MIN_SEQ); short caches
+    and non-TPU platforms take the dense einsum reference.  A pinned
+    "pallas" backend always takes the kernel (interpret mode off-TPU);
+    "xla"/"reference" always take the einsum.
+    """
+    config = config or active_dispatch()
+    platform = _platform(platform)
+    be = config.backend_for("decode_attention")
+    if be == "pallas":
+        return "pallas"
+    if be in ("xla", "reference"):
+        return "xla"
+    if platform == "tpu" and kv_shape[1] >= DECODE_MIN_SEQ:
+        return "pallas"
+    return "xla"
+
+
+def decode_attention(q, k_cache, v_cache, valid):
+    """One-token GQA attention over a cache (the serving decode hot path).
+
+    q: (B, 1, H, hd); k_cache: (B, S, KV, hd); v_cache: (B, S, KV, vd);
+    valid: (B, S) bool strict per-slot mask.  Fully-masked rows produce
+    zeros (see kernels/ref.decode_attention_ref).
+    """
+    config = active_dispatch()
+    platform = _platform(None)
+    path = choose_decode_path(q.shape, k_cache.shape, config=config, platform=platform)
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    _record("decode_attention", path, (B, S, KV, H // KV, hd))
+    if path == "pallas":
+        return decode_attention_pallas(
+            q, k_cache, v_cache, valid, interpret=_interpret(config, platform)
+        )
+    return _ref.decode_attention_ref(q, k_cache, v_cache, valid)

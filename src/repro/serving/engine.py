@@ -1,7 +1,7 @@
 """Continuous-batching serving engine over a slotted KV-cache pool.
 
 The engine owns ONE batched decode cache of ``n_slots`` rows (the pool) and
-runs an admit -> prefill -> shared-decode loop:
+runs an admit -> prefill -> fused-decode loop:
 
   * requests (prompt tokens, max_new_tokens, sampling params) enter a FIFO
     queue (:mod:`repro.serving.scheduler`) and are assigned cache slots as
@@ -10,21 +10,34 @@ runs an admit -> prefill -> shared-decode loop:
     masking keeps padded prefill exact for attention families; recurrent
     families group by exact length because SSM state integrates every input
     token) and their caches are scattered into the pool rows;
-  * ALL active slots then share a single fixed-shape decode step per token,
-    with per-slot positions threaded through ``decode_attention`` /
-    ``mla_decode`` / SSM state, so variable-length sequences coexist in one
-    cache tensor;
+  * ALL active slots then share a DEVICE-RESIDENT fused decode block: a
+    ``lax.scan`` runs ``decode_block`` tokens per host round-trip — decode
+    step, per-slot sampling (:func:`sample_tokens`), stop-token/max-token
+    detection, and position/token-buffer updates all on device.  The host
+    syncs ONCE per block to drain the emitted (tokens, mask) stack, finish
+    completed requests, and admit waiting ones;
   * finished sequences free their slot and the oldest waiting request is
-    admitted mid-stream — the decode batch stays full under load.
+    admitted at the next block boundary — the decode batch stays full under
+    load.
+
+Device-residency contract: the KV-cache pool and the per-slot token /
+position / activity buffers are DONATED through the fused step (the jit
+aliases them in place — no per-step cache copy is ever materialized), and
+the cache never leaves the device.  Per-slot stop detection freezes a slot
+the moment it emits its last token: a frozen slot keeps re-feeding its last
+(token, position) pair, which makes its cache writes idempotent, while its
+emit mask excludes everything after the stop from the drained results.
 
 Kernel backend selection goes through the unified dispatch runtime (PR 1):
-every prefill/decode call runs inside ``use_dispatch``, so ``--kernels``
-applies per engine step exactly as it does to the static path.
+every prefill/fused-decode trace happens inside ``use_dispatch``, so
+``--kernels`` applies per engine step exactly as it does to the static
+path; on TPU the decode step's attention lowers to the Pallas flash-decode
+kernel (kernels/decode_attention.py).
 
 Greedy determinism contract: with temperature 0 the engine emits, per
 request, bit-identical tokens to ``serve_step.greedy_generate`` run on that
-prompt alone (tests/test_engine_parity.py) — the scheduler changes WHEN a
-sequence advances, never WHAT it computes.
+prompt alone (tests/test_engine_parity.py) — the scheduler and the fused
+block change WHEN a sequence advances, never WHAT it computes.
 """
 
 from __future__ import annotations
@@ -39,7 +52,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.dispatch import DispatchConfig, use_dispatch
-from repro.serving.sampling import SamplingParams, sample_tokens
+from repro.serving.sampling import (
+    SALT_MULT,
+    SamplingParams,
+    sample_tokens,
+    token_salts,
+)
 from repro.serving.scheduler import Scheduler, SlotAllocator
 
 __all__ = ["Request", "Engine", "SamplingParams", "percentile"]
@@ -61,7 +79,9 @@ def percentile(sorted_vals, frac: float):
 # admission micro-batches group these by EXACT prompt length.
 _EXACT_LEN_FAMILIES = ("ssm", "hybrid")
 
-_SALT_MULT = 1_000_003  # salt = seed * MULT + token_index (mod int32)
+# eos sentinel for the fused stop check when no eos token is configured:
+# sampled token ids are always >= 0, so -1 never matches.
+_NO_EOS = -1
 
 
 @dataclasses.dataclass
@@ -99,7 +119,7 @@ class Request:
         return self.t_first - self.t_submit
 
     def _salt(self, token_index: int) -> int:
-        return (self.sampling.seed * _SALT_MULT + token_index) & 0x7FFFFFFF
+        return (self.sampling.seed * SALT_MULT + token_index) & 0x7FFFFFFF
 
 
 def _cache_batch_axis(leaf) -> int:
@@ -138,8 +158,26 @@ def _next_pow2(n: int, floor: int) -> int:
     return v
 
 
+def _seed32(seed: int) -> int:
+    """Fold an arbitrary Python-int seed into signed int32 (low 32 bits).
+
+    The fused loop computes salts with wrapping int32 arithmetic; keeping
+    the low 32 bits preserves the low 31 salt bits the host path masks to
+    (see sampling.SALT_MULT), so streams agree for any seed magnitude.
+    """
+    v = seed & 0xFFFFFFFF
+    return v - 0x100000000 if v >= 0x80000000 else v
+
+
 class Engine:
-    """Continuous-batching engine binding (model, params) to a slot pool."""
+    """Continuous-batching engine binding (model, params) to a slot pool.
+
+    ``decode_block``: decode tokens per host round-trip.  The fused step
+    scans this many device decode iterations between host syncs; 1 recovers
+    the classic token-at-a-time loop (useful for debugging), the default 8
+    amortizes host dispatch/transfer to <= 1 sync per 8 decoded tokens per
+    slot.
+    """
 
     def __init__(
         self,
@@ -150,17 +188,20 @@ class Engine:
         max_len: int,
         dispatch: Optional[DispatchConfig] = None,
         eos_token: Optional[int] = None,
+        decode_block: int = 8,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_token = eos_token
+        if decode_block < 1:
+            raise ValueError(f"decode_block must be >= 1, got {decode_block}")
+        self.decode_block = decode_block
         self._dcfg = dispatch if dispatch is not None else DispatchConfig.from_arch(self.cfg)
         self.scheduler = Scheduler(SlotAllocator(n_slots))
 
         with use_dispatch(self._dcfg):
             self.cache = model.init_cache(n_slots, max_len)
-        self._decode_jit = jax.jit(model.decode_step)
         self._prefill_jit = jax.jit(
             lambda p, b, li: model.prefill(p, b, max_len, last_index=li)
         )
@@ -168,13 +209,25 @@ class Engine:
         # (B,V) argsorts + B categorical draws) on the per-token hot path
         self._argmax_jit = jax.jit(lambda l: jnp.argmax(l, axis=-1).astype(jnp.int32))
         self._base_key = jax.random.PRNGKey(0)
+        self._fused_cache: Dict[bool, Any] = {}  # greedy? -> jitted block fn
 
-        # per-slot host state (None = slot idle)
+        # per-slot host state (None = slot idle); the int/bool arrays are
+        # MIRRORS of the device buffers the fused step owns — the host only
+        # rewrites them at admission/finish boundaries, between blocks.
         self._reqs: List[Optional[Request]] = [None] * n_slots
         self._pos = np.zeros((n_slots,), np.int32)  # next write position
         self._tokens = np.zeros((n_slots, 1), np.int32)  # last emitted token
+        self._active = np.zeros((n_slots,), bool)
+        self._emitted = np.zeros((n_slots,), np.int32)  # == len(req.tokens)
+        self._max_new = np.zeros((n_slots,), np.int32)
+        self._seeds = np.zeros((n_slots,), np.int32)
+        self._temps = np.zeros((n_slots,), np.float32)
+        self._topks = np.zeros((n_slots,), np.int32)
         self._next_uid = 0
-        self.steps = 0  # decode steps executed (for utilization stats)
+        # perf accounting (benchmarks/serving.py --csv columns)
+        self.steps = 0  # device decode steps executed
+        self.host_syncs = 0  # fused-block host round-trips
+        self.decoded_tokens = 0  # tokens emitted by decode (excl. prefill)
 
     # ------------------------------------------------------------------ #
     # submission / introspection
@@ -202,6 +255,16 @@ class Engine:
     @property
     def has_work(self) -> bool:
         return self.n_active > 0 or self.n_waiting > 0
+
+    @property
+    def batch_utilization(self) -> float:
+        """Fraction of executed decode-step rows that emitted a real token."""
+        return self.decoded_tokens / (self.steps * self.n_slots) if self.steps else 0.0
+
+    @property
+    def tokens_per_sync(self) -> float:
+        """Decoded tokens amortized per host round-trip."""
+        return self.decoded_tokens / self.host_syncs if self.host_syncs else 0.0
 
     # ------------------------------------------------------------------ #
     # admission + prefill
@@ -265,6 +328,12 @@ class Engine:
             self._reqs[slot] = req
             self._pos[slot] = lens[i]
             self._tokens[slot, 0] = first[i]
+            self._active[slot] = True
+            self._emitted[slot] = 1
+            self._max_new[slot] = req.max_new_tokens
+            self._seeds[slot] = _seed32(req.sampling.seed)
+            self._temps[slot] = req.sampling.temperature
+            self._topks[slot] = req.sampling.top_k
             req.t_first = now
             req.tokens.append(int(first[i]))
         for slot, _ in group:
@@ -277,7 +346,8 @@ class Engine:
     # sampling / completion
     # ------------------------------------------------------------------ #
     def _sample(self, logits, reqs, token_indices):
-        """Sample one token per logits row for the given requests."""
+        """Sample one token per logits row for the given requests (prefill
+        boundary; the decode hot path samples inside the fused block)."""
         if all(r is None or r.sampling.temperature == 0 for r in reqs):
             return np.asarray(self._argmax_jit(logits))
         B = logits.shape[0]
@@ -309,16 +379,81 @@ class Engine:
             self._reqs[slot] = None
             self._pos[slot] = 0
             self._tokens[slot, 0] = 0
+            self._active[slot] = False
+            self._emitted[slot] = 0
+            self._max_new[slot] = 0
+            self._seeds[slot] = 0
+            self._temps[slot] = 0.0
+            self._topks[slot] = 0
             self.scheduler.release(slot)
             return req
         return None
 
     # ------------------------------------------------------------------ #
+    # the fused decode block (device-resident inner loop)
+    # ------------------------------------------------------------------ #
+    def _fused_fn(self, greedy: bool):
+        """Build (once per greedy/sampling variant) the jitted fused block.
+
+        The block scans ``decode_block`` decode iterations on device.  Per
+        iteration: decode_step -> sample -> per-slot stop detection ->
+        position/token updates, with NO host involvement.  Frozen (finished
+        or empty) slots re-feed their last (token, position) pair, so their
+        attention-cache writes are idempotent; recurrent (SSM) state rows of
+        frozen slots do drift, but a slot's state is fully overwritten by
+        the prefill scatter before reuse, and rows are independent across
+        the batch, so live slots never observe it.
+
+        Donation: the cache pool and every per-slot buffer are donated —
+        XLA aliases them in place, so the multi-GB pool is never copied per
+        block, let alone per token.
+        """
+        fn = self._fused_cache.get(greedy)
+        if fn is not None:
+            return fn
+        model = self.model
+        n_steps = self.decode_block
+        eos = _NO_EOS if self.eos_token is None else int(self.eos_token)
+
+        def fused(params, cache, tokens, pos, active, emitted, max_new, seeds, temps, topks, base_key):
+            def body(carry, _):
+                cache, tokens, pos, active, emitted = carry
+                logits, cache = model.decode_step(params, cache, tokens, pos)
+                if greedy:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                else:
+                    # salt from the CURRENT emitted count == the host path's
+                    # token_index (len(req.tokens) before this append)
+                    nxt = sample_tokens(
+                        logits, base_key, token_salts(seeds, emitted), temps, topks
+                    )
+                # frozen slots re-feed their last token at their frozen
+                # position (idempotent cache rewrite, masked out of emits)
+                nxt = jnp.where(active, nxt, tokens[:, 0])
+                emit = active
+                step = active.astype(jnp.int32)
+                pos = pos + step
+                emitted = emitted + step
+                active = active & (emitted < max_new) & (nxt != eos)
+                return (cache, nxt[:, None], pos, active, emitted), (nxt, emit)
+
+            carry, (toks, emits) = jax.lax.scan(
+                body, (cache, tokens, pos, active, emitted), None, length=n_steps
+            )
+            cache, tokens, pos, active, emitted = carry
+            return cache, tokens, pos, active, emitted, toks, emits
+
+        fn = jax.jit(fused, donate_argnums=(1, 2, 3, 4, 5))
+        self._fused_cache[greedy] = fn
+        return fn
+
+    # ------------------------------------------------------------------ #
     # the engine step
     # ------------------------------------------------------------------ #
     def step(self) -> List[Request]:
-        """Admit waiting requests, run one shared decode step; returns the
-        requests that finished during this step."""
+        """Admit waiting requests, run one fused decode block (up to
+        ``decode_block`` tokens per active slot with a single host
+        round-trip); returns the requests that finished during this step."""
         finished: List[Request] = []
 
         for group in self._admission_groups(self.scheduler.admit()):
@@ -326,27 +461,53 @@ class Engine:
                 # requests whose single token came from prefill finish here
                 finished.extend(self._prefill_group(group))
 
-        active = [s for s in range(self.n_slots) if self._reqs[s] is not None]
-        if not active:
+        if not self._active.any():
             return finished
 
+        greedy = not (self._temps[self._active] > 0).any()
+        fused = self._fused_fn(greedy)
         with use_dispatch(self._dcfg):
-            logits, self.cache = self._decode_jit(
-                self.params, self.cache, jnp.asarray(self._tokens), jnp.asarray(self._pos)
+            (
+                self.cache,
+                tokens_d,
+                pos_d,
+                active_d,
+                emitted_d,
+                toks_d,
+                emits_d,
+            ) = fused(
+                self.params,
+                self.cache,
+                jnp.asarray(self._tokens),
+                jnp.asarray(self._pos),
+                jnp.asarray(self._active),
+                jnp.asarray(self._emitted),
+                jnp.asarray(self._max_new),
+                jnp.asarray(self._seeds),
+                jnp.asarray(self._temps),
+                jnp.asarray(self._topks),
+                self._base_key,
             )
-            nxt = self._sample(
-                logits,
-                self._reqs,
-                [len(r.tokens) if r is not None else 0 for r in self._reqs],
-            )
-        self.steps += 1
+        # THE host sync for this block: drain the (n_steps, n_slots) emit
+        # stack plus the final per-slot state in one transfer batch.
+        toks = np.asarray(toks_d)
+        emits = np.asarray(emits_d)
+        # np.array (not asarray): the mirrors are host-MUTABLE at admission /
+        # finish boundaries, and asarray of a device buffer is read-only
+        self._tokens = np.array(tokens_d)
+        self._pos = np.array(pos_d)
+        self._active = np.array(active_d)
+        self._emitted = np.array(emitted_d)
+        self.steps += self.decode_block
+        self.host_syncs += 1
+        self.decoded_tokens += int(emits.sum())
 
-        for s in active:
+        for s in np.nonzero(emits.any(axis=0))[0]:
             req = self._reqs[s]
-            self._pos[s] += 1
-            self._tokens[s, 0] = nxt[s]
-            req.tokens.append(int(nxt[s]))
-            done = self._maybe_finish(s)
+            for tok, emit in zip(toks[:, s], emits[:, s]):
+                if emit:
+                    req.tokens.append(int(tok))
+            done = self._maybe_finish(int(s))
             if done is not None:
                 finished.append(done)
         return finished
@@ -358,9 +519,18 @@ class Engine:
         self,
         requests: Sequence[Request],
         arrivals: Optional[Sequence[float]] = None,
+        *,
+        max_idle_wait: float = 0.05,
     ) -> List[Request]:
         """Submit ``requests`` (optionally at wall-clock ``arrivals`` offsets,
-        seconds) and step until all complete.  Returns them in finish order."""
+        seconds) and step until all complete.  Returns them in finish order.
+
+        Idle handling: when no request is active and the next arrival is in
+        the future, sleep EXACTLY to that arrival — but never longer than
+        ``max_idle_wait`` seconds per nap, so ``has_work`` transitions from
+        concurrent ``submit()`` callers are noticed promptly and a long gap
+        neither busy-spins nor oversleeps past new work.
+        """
         order = sorted(range(len(requests)), key=lambda i: arrivals[i] if arrivals else 0)
         t0 = time.perf_counter()
         pending = list(order)
@@ -370,9 +540,11 @@ class Engine:
             while pending and (arrivals is None or arrivals[pending[0]] <= now):
                 self.submit(requests[pending[0]])
                 pending.pop(0)
-            if not self.has_work:
-                if pending:  # idle until the next arrival
-                    time.sleep(max(0.0, arrivals[pending[0]] - (time.perf_counter() - t0)))
+            if self.has_work:
+                finished.extend(self.step())
                 continue
-            finished.extend(self.step())
+            if pending:  # idle until the next arrival, in capped naps
+                wait = arrivals[pending[0]] - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, max_idle_wait))
         return finished

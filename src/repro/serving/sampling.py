@@ -19,7 +19,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingParams", "sample_tokens"]
+__all__ = ["SamplingParams", "sample_tokens", "token_salts", "SALT_MULT"]
+
+# salt = seed * SALT_MULT + token_index, truncated to the low 31 bits.  The
+# host computes this with Python bignums and the fused decode loop with
+# wrapping int32 arithmetic: a bitwise AND with 0x7FFFFFFF extracts the low
+# 31 bits, which every mod-2^k (k >= 31) representation agrees on, so both
+# paths fold the SAME salt into the PRNG and sampled traces replay
+# bit-identically whichever loop executed them.
+SALT_MULT = 1_000_003
+
+
+def token_salts(seeds, token_index):
+    """Vectorized per-slot salts: (B,) int32 seeds x (B,) int32 token indices."""
+    seeds = jnp.asarray(seeds, jnp.int32)
+    token_index = jnp.asarray(token_index, jnp.int32)
+    return (seeds * jnp.int32(SALT_MULT) + token_index) & jnp.int32(0x7FFFFFFF)
 
 
 @dataclasses.dataclass(frozen=True)

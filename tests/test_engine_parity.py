@@ -74,9 +74,11 @@ def test_engine_greedy_parity(arch_id):
     assert r1.tokens == refs[1], f"staggered parity broken for {arch_id} (r1)"
 
 
-def test_engine_parity_under_slot_churn():
+@pytest.mark.parametrize("decode_block", [1, 8])
+def test_engine_parity_under_slot_churn(decode_block):
     """3 requests on 2 slots: the queued request is admitted into a REUSED
-    slot mid-stream and must still match its solo reference exactly."""
+    slot mid-stream and must still match its solo reference exactly — both
+    token-at-a-time (decode_block=1) and through the fused 8-token block."""
     cfg = get_arch("llama3.2-1b", reduced=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -88,17 +90,72 @@ def test_engine_parity_under_slot_churn():
     refs = [
         _reference(model, params, p, {}, s) for p, s in zip(prompts, steps)
     ]
-    eng = Engine(model, params, n_slots=2, max_len=MAX_LEN)
+    eng = Engine(model, params, n_slots=2, max_len=MAX_LEN, decode_block=decode_block)
     reqs = [
         eng.submit(Request(prompt=p, max_new_tokens=s))
         for p, s in zip(prompts, steps)
     ]
     eng.step()  # admits the first two; slot exhaustion queues the third
-    assert eng.n_active == 2 and eng.n_waiting == 1
+    if decode_block == 1:
+        # per-token stepping: both admitted requests are still mid-decode
+        assert eng.n_active == 2 and eng.n_waiting == 1
+    else:
+        # the fused block may complete admitted requests within one step();
+        # the third request must still be queued, never dropped
+        assert eng.n_waiting == 1
     while eng.has_work:
         eng.step()
     for i, (req, ref) in enumerate(zip(reqs, refs)):
         assert req.tokens == ref, f"request {i} diverged under slot churn"
+
+
+def test_engine_fused_block_matches_per_token_stepping():
+    """decode_block is a PURE host-sync cadence knob: for identical traffic
+    the emitted tokens are bit-identical across block sizes."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32) for n in (6, 4, 5)
+    ]
+    steps = [7, 5, 9]
+    outs = {}
+    for block in (1, 3, 8):
+        eng = Engine(model, params, n_slots=2, max_len=MAX_LEN, decode_block=block)
+        reqs = [
+            eng.submit(Request(prompt=p, max_new_tokens=s))
+            for p, s in zip(prompts, steps)
+        ]
+        while eng.has_work:
+            eng.step()
+        outs[block] = [r.tokens for r in reqs]
+    assert outs[1] == outs[3] == outs[8]
+
+
+def test_engine_host_sync_amortization():
+    """The fused loop's whole point: one long greedy request decodes >= 8
+    tokens per host round-trip (the acceptance cadence), and the emit masks
+    account for every token exactly once."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+    eng = Engine(model, params, n_slots=1, max_len=32, decode_block=8)
+    req = eng.submit(Request(prompt=prompt, max_new_tokens=17))  # 1 prefill + 16 decode
+    while eng.has_work:
+        eng.step()
+    assert len(req.tokens) == 17
+    assert eng.decoded_tokens == 16
+    assert eng.host_syncs == 2  # 16 decode tokens in two 8-token blocks
+    assert eng.tokens_per_sync >= 8.0
+    assert 0.0 < eng.batch_utilization <= 1.0
+    # and the tokens still match the per-token reference
+    out = greedy_generate(
+        model, params, {"tokens": jnp.asarray(prompt[None])}, steps=17, max_len=32
+    )
+    assert req.tokens == np.asarray(out)[0].tolist()
 
 
 def test_engine_parity_swa_beyond_window():
@@ -132,6 +189,37 @@ def test_engine_parity_swa_beyond_window():
         eng.step()
     assert reqs[0].tokens == refs[0]
     assert reqs[1].tokens == refs[1]
+
+
+def test_engine_eos_stops_inside_fused_block():
+    """Device-side stop detection: a request hitting its eos token mid-block
+    stops emitting EXACTLY there — tokens after the stop never surface."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+
+    probe = Engine(model, params, n_slots=1, max_len=MAX_LEN, decode_block=8)
+    ref = probe.submit(Request(prompt=prompt, max_new_tokens=9))
+    while probe.has_work:
+        probe.step()
+    assert len(ref.tokens) == 9
+    # pick a mid-stream token as eos (first index whose token value hasn't
+    # appeared earlier, so the truncation point is unambiguous)
+    eos_idx = next(
+        i for i in range(1, len(ref.tokens) - 1) if ref.tokens[i] not in ref.tokens[:i]
+    )
+    eos = ref.tokens[eos_idx]
+
+    eng = Engine(
+        model, params, n_slots=1, max_len=MAX_LEN, decode_block=8, eos_token=eos
+    )
+    req = eng.submit(Request(prompt=prompt, max_new_tokens=9))
+    while eng.has_work:
+        eng.step()
+    assert req.tokens == ref.tokens[: eos_idx + 1]
+    assert req.tokens[-1] == eos
 
 
 def test_engine_sampling_deterministic_across_interleavings():

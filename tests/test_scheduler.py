@@ -84,7 +84,10 @@ def test_engine_exhaustion_queues_and_drains(small_model):
 
     cfg, model, params = small_model
     rng = np.random.default_rng(0)
-    eng = Engine(model, params, n_slots=2, max_len=16)
+    # decode_block=1: this test pins down the PER-TOKEN slot lifecycle
+    # (admission counts between individual decode steps); fused-block
+    # cadence is covered by tests/test_engine_parity.py
+    eng = Engine(model, params, n_slots=2, max_len=16, decode_block=1)
     reqs = [
         eng.submit(
             Request(

@@ -54,6 +54,37 @@ def test_higher_q_gives_closer_logits():
     assert errs[4] <= errs[1] * 1.05, errs  # q=4 at least as good (usually much better)
 
 
+def test_engine_run_idle_waits_for_arrivals():
+    """Engine.run with a wall-clock arrival gap: the idle loop sleeps to the
+    next arrival (in capped naps — no busy-spin, no oversleep past new work)
+    and every request completes with arrival-consistent timestamps."""
+    import time
+
+    from repro.serving import Engine, Request
+
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    reqs = [
+        Request(
+            prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+            max_new_tokens=3,
+        )
+        for _ in range(2)
+    ]
+    arrivals = [0.0, 0.4]
+    eng = Engine(model, params, n_slots=2, max_len=16)
+    t0 = time.perf_counter()
+    done = eng.run(reqs, arrivals=arrivals, max_idle_wait=0.05)
+    dt = time.perf_counter() - t0
+    assert len(done) == 2
+    assert all(len(r.tokens) == 3 for r in reqs)
+    # the second request cannot have been submitted before its arrival
+    assert reqs[1].t_submit - t0 >= arrivals[1] - 1e-3
+    assert dt >= arrivals[1] - 1e-3  # the run really waited for it
+
+
 def test_decode_with_compressed_cacheless_layers():
     """Factored kernels survive the full prefill+decode path incl. caches."""
     cfg = get_arch("h2o-danube-1.8b", reduced=True)  # exercises SWA ring cache
