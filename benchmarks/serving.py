@@ -20,6 +20,14 @@ the two columns that make the fused-loop win visible in the CI artifact.
 ``--arch`` takes a comma list so one invocation can cover several reduced
 archs.
 
+``--page-size`` runs the trace on the PAGED engine (``--kv-pages`` sizes
+the pool, ``--prefill-chunk`` enables chunked prefill); ``--long-frac``
+mixes long prompts into the trace and adds a TTFT-p95-over-short-requests
+column; ``--compare-paged`` runs each arch twice at equal KV bytes — flat
+pool, then a paged pool backing twice the slots — and gates the paged row
+against the flat one in the same run (more admitted concurrency, no
+throughput loss, bounded short-request TTFT).
+
 ``--json BENCH_serving.json`` additionally writes the trace rows as a JSON
 result document, and ``--check-baseline benchmarks/baselines/
 BENCH_serving.json --tolerance 0.5`` compares tok/s and utilization against
@@ -174,19 +182,35 @@ def run_trace(
     q: int = 4,
     decode_block: int = 8,
     warmup: bool = True,
+    page_size: int = 0,
+    kv_pages: int = 0,
+    prefill_chunk: int = 0,
+    long_frac: float = 0.0,
+    long_prompt_range=(48, 64),
+    max_len: int = 0,
+    row_suffix: str = "",
 ):
     """Replay a Poisson arrival trace through the continuous engine.
 
     One row per arch: tok/s over the busy window plus p50/p95 request
     latency (submit -> final token), mean time-to-first-token, tokens per
-    host sync (``decode_block`` amortization), and decode-batch utilization
-    (emitted tokens / executed decode-step rows).  Arrival times are
-    exponential inter-arrivals at ``rate`` req/s; prompt and output lengths
-    are uniform over the given ranges — so the trace exercises ragged
-    admission, slot exhaustion queueing, and mid-stream slot reuse rather
-    than one synchronized batch.
+    host sync (``decode_block`` amortization), decode-batch utilization
+    (emitted tokens / executed decode-step rows), peak admitted concurrency,
+    and KV-memory accounting — capacity vs PEAK BYTES ACTUALLY RESIDENT
+    (allocated pages in paged mode; a flat pool is fully committed up
+    front).  Arrival times are exponential inter-arrivals at ``rate``
+    req/s; prompt and output lengths are uniform over the given ranges —
+    so the trace exercises ragged admission, exhaustion queueing, and
+    mid-stream slot reuse rather than one synchronized batch.
 
-    ``warmup`` (default on) replays two throwaway requests through the SAME
+    ``page_size`` switches the engine to the paged KV pool (``kv_pages``
+    sizes it; 0 = flat-equivalent capacity) and ``prefill_chunk`` enables
+    chunked prefill.  ``long_frac`` > 0 makes that fraction of requests
+    draw prompts from ``long_prompt_range`` instead (the long-prompt mixed
+    trace): the row then also reports TTFT p95 over the SHORT requests
+    alone — the queue-behind-a-long-prefill number chunked prefill bounds.
+
+    ``warmup`` (default on) replays throwaway requests through the SAME
     engine before the clock starts, so the row measures steady-state
     serving throughput rather than jit compile time (which on the reduced
     CPU configs is seconds — an order of magnitude more than the decode
@@ -207,20 +231,28 @@ def run_trace(
             )
         rng = np.random.default_rng(seed)
         arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests)).tolist()
-        max_len = prompt_range[1] + gen_range[1]
-        reqs = []
+        top_prompt = max(prompt_range[1], long_prompt_range[1] if long_frac > 0 else 0)
+        eff_max_len = max_len or (top_prompt + gen_range[1])
+        reqs, is_long = [], []
         for i in range(n_requests):
             sp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed + i)
+            long = long_frac > 0 and rng.random() < long_frac
+            rng_range = long_prompt_range if long else prompt_range
+            is_long.append(long)
             reqs.append(
                 Request(
-                    prompt=rng.integers(0, cfg.vocab, size=(int(rng.integers(*prompt_range)),)),
+                    prompt=rng.integers(0, cfg.vocab, size=(int(rng.integers(*rng_range)),)),
                     max_new_tokens=int(rng.integers(*gen_range)),
                     sampling=sp,
                     extras=modality_extras(cfg, rng),
                 )
             )
         eng = Engine(
-            model, params, n_slots=n_slots, max_len=max_len, decode_block=decode_block
+            model, params, n_slots=n_slots, max_len=eff_max_len,
+            decode_block=decode_block,
+            page_size=page_size or None,
+            kv_pages=kv_pages or None,
+            prefill_chunk=prefill_chunk or None,
         )
         if warmup:
             # Compile OUTSIDE the clock.  Admission buckets micro-batch
@@ -233,9 +265,24 @@ def run_trace(
             # even when n_slots is not a power of two), hits every prefill
             # program plus the fused decode block.  The timed replay then
             # measures serving, not XLA.
+            #
+            # Paged engine: the paged decode block and page-pool prefill
+            # scatter compile once per (group, prompt-bucket) shape exactly
+            # like the flat ones — the bucket sweep below covers them, and
+            # page-COUNT enumeration collapses into it because every paged
+            # program is block-table-steered at a single static shape
+            # (ceil(max_len / page) table entries; page count is runtime
+            # data, not a compile-time shape).  Chunked prefill adds ONE
+            # more program — the fixed (1, prefill_chunk) chunk — which any
+            # single long warmup prompt compiles; chunk count is again
+            # runtime data.  Prompts longer than the chunk bypass grouped
+            # prefill, so those lengths warm up as singletons.
             wrng = np.random.default_rng(seed + 1)
             wsp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed)
-            lens = sorted({r.prompt.size for r in reqs})
+            chunking = prefill_chunk and eng.model.prefill_chunk is not None
+            all_lens = sorted({r.prompt.size for r in reqs})
+            lens = [n for n in all_lens if not (chunking and n > prefill_chunk)]
+            chunk_lens = [n for n in all_lens if chunking and n > prefill_chunk]
             gs, g = [], 1
             while g < n_slots:
                 gs.append(g)
@@ -254,7 +301,18 @@ def run_trace(
                             for _ in range(g)
                         ]
                     )
-            eng.steps = eng.host_syncs = eng.decoded_tokens = 0
+            if chunk_lens:  # one ragged-tail chunked prompt compiles the rest
+                eng.run(
+                    [
+                        Request(
+                            prompt=wrng.integers(0, cfg.vocab, size=(int(chunk_lens[-1]),)),
+                            max_new_tokens=2,
+                            sampling=wsp,
+                            extras=modality_extras(cfg, wrng),
+                        )
+                    ]
+                )
+            eng.reset_counters()
         t0 = time.perf_counter()
         done = eng.run(reqs, arrivals=arrivals)
         dt = time.perf_counter() - t0
@@ -263,39 +321,46 @@ def run_trace(
         lats = sorted(r.latency for r in done)
         p50, p95 = percentile(lats, 0.5), percentile(lats, 0.95)
         ttft = float(np.mean([r.ttft for r in done]))
-        rows.append(
-            dict(
-                name=f"trace={arch}",
-                arch=arch,
-                seconds=dt,
-                tok_s=n_tok / dt,
-                p50_ms=p50 * 1e3,
-                p95_ms=p95 * 1e3,
-                ttft_ms=ttft * 1e3,
-                n_requests=n_requests,
-                decode_steps=eng.steps,
-                host_syncs=eng.host_syncs,
-                tok_per_sync=eng.tokens_per_sync,
-                util=eng.batch_utilization,
-            )
+        uid_long = {r.uid for r, lg in zip(reqs, is_long) if lg}
+        short_ttfts = sorted(r.ttft for r in done if r.uid not in uid_long)
+        row = dict(
+            name=f"trace={arch}{row_suffix}",
+            arch=f"{arch}{row_suffix}",
+            seconds=dt,
+            tok_s=n_tok / dt,
+            p50_ms=p50 * 1e3,
+            p95_ms=p95 * 1e3,
+            ttft_ms=ttft * 1e3,
+            n_requests=n_requests,
+            decode_steps=eng.steps,
+            host_syncs=eng.host_syncs,
+            tok_per_sync=eng.tokens_per_sync,
+            util=eng.batch_utilization,
+            peak_active=eng.peak_active,
+            kv_bytes_cap=eng.kv_bytes_capacity,
+            kv_bytes_peak=eng.kv_bytes_peak,
+            pages_peak=eng.peak_pages_in_use,
+            prefill_chunks=eng.prefill_chunks,
         )
+        if short_ttfts:
+            row["ttft_p95_short_ms"] = percentile(short_ttfts, 0.95) * 1e3
+        rows.append(row)
     return rows
 
 
 def write_json(rows, json_path, *, config=None):
     """Write trace rows as the BENCH_serving.json result document."""
+    keys = (
+        "tok_s", "p50_ms", "p95_ms", "ttft_ms", "ttft_p95_short_ms",
+        "n_requests", "decode_steps", "host_syncs", "tok_per_sync", "util",
+        "peak_active", "kv_bytes_cap", "kv_bytes_peak", "pages_peak",
+        "prefill_chunks",
+    )
     doc = {
         "kind": "poisson_trace",
         "config": config or {},
         "rows": {
-            r["arch"]: {
-                k: r[k]
-                for k in (
-                    "tok_s", "p50_ms", "p95_ms", "ttft_ms",
-                    "n_requests", "decode_steps", "host_syncs",
-                    "tok_per_sync", "util",
-                )
-            }
+            r["arch"]: {k: r[k] for k in keys if k in r}
             for r in rows
             if "arch" in r
         },
@@ -310,11 +375,15 @@ def check_baseline(rows, baseline_path, *, tolerance: float) -> int:
     """Compare trace rows to a checked-in baseline; return #regressions.
 
     tok/s regresses if current < baseline * (1 - tolerance); decode-batch
-    utilization likewise.  Throughput on shared CI runners is noisy, so the
-    tolerance is deliberately generous — the gate exists to catch the
-    "decode got order-of-magnitude slower / the batch went idle" class of
-    regression, not 5% drift.  Archs missing from the baseline are skipped
-    with a note (so adding an arch to the trace never breaks CI).
+    utilization likewise; TTFT p95 over short requests (the long-prompt
+    mixed trace: present when both sides report it) regresses UPWARD —
+    current > baseline * (1 + tolerance) — since chunked prefill exists
+    precisely to bound it.  Throughput on shared CI runners is noisy, so
+    the tolerance is deliberately generous — the gate exists to catch the
+    "decode got order-of-magnitude slower / the batch went idle / a long
+    prefill stalls everyone again" class of regression, not 5% drift.
+    Archs missing from the baseline are skipped with a note (so adding an
+    arch to the trace never breaks CI).
     """
     with open(baseline_path) as f:
         base = json.load(f)["rows"]
@@ -335,6 +404,60 @@ def check_baseline(rows, baseline_path, *, tolerance: float) -> int:
                 f"{'OK' if ok else 'REGRESSION'}"
             )
             failures += 0 if ok else 1
+        if "ttft_p95_short_ms" in r and "ttft_p95_short_ms" in base[arch]:
+            # informational only: absolute TTFT tracks runner load too
+            # tightly to gate — the binding TTFT gate is the SAME-RUN
+            # paged-vs-flat comparison in check_paged_rows
+            print(
+                f"[perf-smoke] {arch} ttft_p95_short_ms: "
+                f"current={r['ttft_p95_short_ms']:.1f} "
+                f"baseline={base[arch]['ttft_p95_short_ms']:.1f} (info)"
+            )
+    return failures
+
+
+def check_paged_rows(rows, *, tolerance: float = 0.3) -> int:
+    """Same-run flat-vs-paged gates (the --compare-paged contract).
+
+    Both rows ran back-to-back on the SAME machine under the same load, so
+    these comparisons are robust where absolute wall-clock floors are not:
+    at equal KV bytes the paged engine must (a) admit strictly more
+    concurrent requests (peak_active — a deterministic count, gated with
+    NO slack), (b) not lose throughput, and (c) hold TTFT p95 for short
+    requests at or below the flat engine's while a long prompt is
+    prefilling (that bound is the entire point of chunked prefill).  The
+    two timing-based checks still see half-trace noise (a noisy neighbor
+    can land on one half only), so they get ``tolerance`` slack — tighter
+    than the cross-machine baseline floors, but not zero.  Returns
+    #violations.
+    """
+    by_arch = {r["arch"]: r for r in rows if "arch" in r}
+    failures = 0
+    for arch, flat in by_arch.items():
+        paged = by_arch.get(f"{arch}+paged")
+        if paged is None or arch.endswith("+paged"):
+            continue
+        checks = [
+            ("peak_active", paged["peak_active"] > flat["peak_active"],
+             f"{paged['peak_active']} > {flat['peak_active']}"),
+            ("tok_s",
+             paged["tok_s"] >= flat["tok_s"] * (1.0 - tolerance),
+             f"{paged['tok_s']:.1f} >= {flat['tok_s']:.1f} - {tolerance:.0%}"),
+        ]
+        if "ttft_p95_short_ms" in paged and "ttft_p95_short_ms" in flat:
+            checks.append(
+                ("ttft_p95_short_ms",
+                 paged["ttft_p95_short_ms"]
+                 <= flat["ttft_p95_short_ms"] * (1.0 + tolerance),
+                 f"{paged['ttft_p95_short_ms']:.1f} <= "
+                 f"{flat['ttft_p95_short_ms']:.1f} + {tolerance:.0%}")
+            )
+        for metric, ok, detail in checks:
+            print(
+                f"[perf-smoke] {arch} paged-vs-flat {metric}: {detail} "
+                f"{'OK' if ok else 'VIOLATION'}"
+            )
+            failures += 0 if ok else 1
     return failures
 
 
@@ -342,13 +465,22 @@ def emit_csv(rows, csv_path=None):
     lines = []
     for r in rows:
         if "p50_ms" in r:  # trace rows
+            extra = ""
+            if "ttft_p95_short_ms" in r:
+                extra = f";ttft_p95_short_ms={r['ttft_p95_short_ms']:.0f}"
             lines.append(
                 f"serving/{r['name']},{r['seconds']*1e6:.0f},"
                 f"tok_s={r['tok_s']:.1f};p50_ms={r['p50_ms']:.0f};"
                 f"p95_ms={r['p95_ms']:.0f};ttft_ms={r['ttft_ms']:.0f};"
                 f"n_req={r['n_requests']};decode_steps={r['decode_steps']};"
                 f"host_syncs={r['host_syncs']};"
-                f"tok_per_sync={r['tok_per_sync']:.1f};util={r['util']:.3f}"
+                f"tok_per_sync={r['tok_per_sync']:.1f};util={r['util']:.3f};"
+                f"peak_active={r['peak_active']};"
+                f"kv_bytes_peak={r['kv_bytes_peak']};"
+                f"kv_bytes_cap={r['kv_bytes_cap']};"
+                f"pages_peak={r['pages_peak']};"
+                f"prefill_chunks={r['prefill_chunks']}"
+                f"{extra}"
             )
         else:
             extra = f";hits={r['hits']}" if "hits" in r else ""
@@ -393,6 +525,23 @@ if __name__ == "__main__":
                     help="min,max prompt tokens (trace mode)")
     ap.add_argument("--gen-range", default="4,16",
                     help="min,max generated tokens (trace mode)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens; 0 = flat slot pool")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged-pool size in pages; 0 = flat-equivalent")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill chunk size; 0 = monolithic")
+    ap.add_argument("--long-frac", type=float, default=0.0,
+                    help="fraction of requests drawing LONG prompts "
+                    "(long-prompt mixed trace)")
+    ap.add_argument("--long-prompt-range", default="48,64",
+                    help="min,max long-prompt tokens when --long-frac > 0")
+    ap.add_argument("--compare-paged", action="store_true",
+                    help="run each arch TWICE at equal KV bytes: the flat "
+                    "slot pool, then a paged pool (+paged row) with twice "
+                    "the slots backed by the same page budget — the "
+                    "admitted-concurrency/throughput comparison the paged "
+                    "pool exists for")
     ap.add_argument("--no-warmup", action="store_true",
                     help="include jit compile time in the trace row")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -411,11 +560,9 @@ if __name__ == "__main__":
                     "are noisy; this gates collapses, not drift)")
     args = ap.parse_args()
     if args.trace == "poisson":
-        rows = run_trace(
-            tuple(a.strip() for a in args.arch.split(",") if a.strip()),
+        common = dict(
             rate=args.rate,
             n_requests=args.n_requests,
-            n_slots=args.n_slots,
             temperature=args.temperature,
             top_k=args.top_k,
             seed=args.seed,
@@ -423,8 +570,50 @@ if __name__ == "__main__":
             decode_block=args.decode_block,
             prompt_range=tuple(int(x) for x in args.prompt_range.split(",")),
             gen_range=tuple(int(x) for x in args.gen_range.split(",")),
+            long_frac=args.long_frac,
+            long_prompt_range=tuple(int(x) for x in args.long_prompt_range.split(",")),
             warmup=not args.no_warmup,
         )
+        arch_list = tuple(a.strip() for a in args.arch.split(",") if a.strip())
+        # effective paged geometry, recorded verbatim in the --json config
+        # block so a checked-in baseline documents the run that produced it
+        eff = dict(page_size=args.page_size, kv_pages=args.kv_pages,
+                   prefill_chunk=args.prefill_chunk)
+        if args.compare_paged:
+            # equal KV bytes: the paged pool holds exactly the flat pool's
+            # token capacity (n_slots * max_len worth of pages) but backs
+            # TWICE the decode slots — admission is page-gated, so the
+            # paged engine can admit more concurrent requests whenever
+            # real footprints are below the flat worst case.
+            page = args.page_size or 16
+            chunk = args.prefill_chunk or 2 * page
+            top = max(common["prompt_range"][1],
+                      common["long_prompt_range"][1] if args.long_frac > 0 else 0)
+            max_len = top + common["gen_range"][1]
+            max_pages = -(-max_len // page)
+            eff = dict(page_size=page,
+                       kv_pages=args.kv_pages or args.n_slots * max_pages,
+                       prefill_chunk=chunk, paged_n_slots=2 * args.n_slots)
+            rows = run_trace(arch_list, n_slots=args.n_slots, max_len=max_len, **common)
+            rows += run_trace(
+                arch_list,
+                n_slots=eff["paged_n_slots"],
+                max_len=max_len,
+                page_size=eff["page_size"],
+                kv_pages=eff["kv_pages"],
+                prefill_chunk=eff["prefill_chunk"],
+                row_suffix="+paged",
+                **common,
+            )
+        else:
+            rows = run_trace(
+                arch_list,
+                n_slots=args.n_slots,
+                page_size=args.page_size,
+                kv_pages=args.kv_pages,
+                prefill_chunk=args.prefill_chunk,
+                **common,
+            )
     elif args.sweep_backends:
         rows = run_backend_sweep()
     else:
@@ -440,11 +629,19 @@ if __name__ == "__main__":
                 rate=args.rate, n_requests=args.n_requests, n_slots=args.n_slots,
                 decode_block=args.decode_block, seed=args.seed, alpha=args.alpha,
                 prompt_range=args.prompt_range, gen_range=args.gen_range,
+                long_frac=args.long_frac,
+                long_prompt_range=args.long_prompt_range,
+                compare_paged=args.compare_paged,
+                **eff,
             ),
         )
     if args.check_baseline:
         if args.trace != "poisson":
             raise SystemExit("--check-baseline applies to --trace poisson rows")
         n_bad = check_baseline(rows, args.check_baseline, tolerance=args.tolerance)
+        if args.compare_paged:
+            # half the baseline tolerance: same-machine relative gates are
+            # tighter than cross-machine absolute floors, but not noise-free
+            n_bad += check_paged_rows(rows, tolerance=args.tolerance / 2)
         if n_bad:
             sys.exit(f"[perf-smoke] {n_bad} metric(s) regressed beyond tolerance")

@@ -1,6 +1,7 @@
 """Continuous-batching serving demo: RSI-compressed model under live traffic.
 
     PYTHONPATH=src python examples/continuous_serving.py [--alpha 0.3] [--q 4]
+    PYTHONPATH=src python examples/continuous_serving.py --paged
 
 What it shows:
   * requests with DIFFERENT prompt lengths, output budgets and sampling
@@ -11,7 +12,11 @@ What it shows:
     batching emits exactly the tokens the reference ``greedy_generate``
     produces for that prompt alone;
   * RSI compression (the paper's Alg 3.1) as a serving lever: the same
-    engine drives the compressed checkpoint.
+    engine drives the compressed checkpoint;
+  * with ``--paged``: the PAGED KV pool — fixed-size pages + per-slot block
+    tables at HALF the flat pool's capacity, admission gated on actual page
+    need, one long prompt prefilled in chunks interleaved with the running
+    decodes — same tokens, fewer resident bytes.
 """
 
 import argparse
@@ -35,6 +40,9 @@ def main():
     ap.add_argument("--n-slots", type=int, default=3)
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from a paged KV pool at half the flat "
+                    "capacity, with one long prompt chunk-prefilled")
     args = ap.parse_args()
 
     cfg = get_arch("llama3.2-1b", reduced=True)
@@ -67,7 +75,17 @@ def main():
             )
         )
 
-    eng = Engine(model, params, n_slots=args.n_slots, max_len=max_len)
+    paged_kw = {}
+    if args.paged:
+        # half the flat pool's token capacity, 8-token pages, and prompts
+        # longer than 12 tokens prefilled in chunks between decode blocks
+        paged_kw = dict(page_size=8,
+                        kv_pages=args.n_slots * max_len // (2 * 8),
+                        prefill_chunk=12)
+        reqs.append(Request(  # a long prompt that chunk-prefills
+            prompt=rng.integers(0, cfg.vocab, size=(30,)), max_new_tokens=8,
+        ))
+    eng = Engine(model, params, n_slots=args.n_slots, max_len=max_len, **paged_kw)
     t0 = time.time()
     done = eng.run(reqs)
     dt = time.time() - t0
@@ -76,6 +94,14 @@ def main():
         f"[engine] {len(done)} requests ({args.n_slots} slots), {n_tok} tokens "
         f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s, {eng.steps} shared decode steps)"
     )
+    if args.paged:
+        print(
+            f"[paged] {eng.kv_pages} pages of {eng.page_size} tokens — "
+            f"half the flat pool's {args.n_slots}x{max_len}-token reservation "
+            f"({eng.kv_bytes_capacity} B pool, peak {eng.peak_pages_in_use} "
+            f"pages / {eng.kv_bytes_peak} B resident, "
+            f"{eng.prefill_chunks} prefill chunks interleaved)"
+        )
     for r in sorted(done, key=lambda r: r.uid):
         kind = "greedy" if r.sampling.temperature == 0 else (
             f"T={r.sampling.temperature} k={r.sampling.top_k}"

@@ -34,7 +34,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention_kernel", "decode_attention_pallas"]
+__all__ = [
+    "decode_attention_kernel",
+    "decode_attention_pallas",
+    "paged_decode_attention_pallas",
+]
 
 NEG_INF = -1e30
 
@@ -123,4 +127,85 @@ def decode_attention_pallas(
         ],
         interpret=interpret,
     )(qg, k_cache, v_cache, valid_i)
+    return out.reshape(B, 1, H, vd)
+
+
+def _paged_decode_kernel(
+    bt_ref, q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, n_s
+):
+    # The block table was consumed by the BlockSpec index maps (scalar
+    # prefetch); the body is EXACTLY the flat split-KV online softmax — one
+    # page of the slot's cache per sequential grid step.
+    del bt_ref
+    decode_attention_kernel(
+        q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+        scale=scale, n_s=n_s,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(
+    q: jax.Array,  # (B, 1, H, hd)
+    k_pool: jax.Array,  # (P, page, KV, hd) physical pages
+    v_pool: jax.Array,  # (P, page, KV, vd)
+    block_table: jax.Array,  # (B, n_tbl) int32 page ids
+    n_valid: jax.Array,  # (B,) int32 valid logical positions per slot
+    *,
+    interpret: bool = False,
+):
+    """Block-table flash-decode: one-token GQA attention over a PAGED cache.
+
+    Identical split-KV online-softmax / GQA-tiling structure to
+    :func:`decode_attention_pallas`, but the cache's sequence dim is
+    virtualized: the grid's sequential axis walks the slot's BLOCK TABLE
+    (one fixed-size page per step), and the K/V BlockSpec index maps — with
+    the table as a scalar-prefetch operand — DMA each page straight out of
+    the shared physical pool.  No (B, S, KV, hd) per-slot gather is ever
+    materialized, which is the whole point: the flat engine's worst-case
+    per-slot reservation becomes a pool of pages shared by every slot.
+
+    Entries of ``block_table`` beyond a slot's allocation may point at the
+    pool's trash page; the (B, S_logical) validity mask built from
+    ``n_valid`` zeroes their probabilities, so trash contents are never
+    observed (fully-masked rows produce zeros, same contract as the flat
+    kernel).  The gather-einsum oracle is kernels/ref.paged_decode_attention_ref.
+    """
+    B, one, H, hd = q.shape
+    if one != 1:
+        raise ValueError(f"decode query must be one token, got q {q.shape}")
+    P, page, KV, _ = k_pool.shape
+    vd = v_pool.shape[-1]
+    if H % KV:
+        raise ValueError(f"H={H} not a multiple of KV={KV}")
+    if block_table.shape[0] != B:
+        raise ValueError(f"block_table {block_table.shape} != (B, n_tbl), B={B}")
+    G = H // KV
+    n_tbl = block_table.shape[1]
+    S = n_tbl * page
+    qg = q.reshape(B, KV, G, hd)
+    valid_i = (jnp.arange(S)[None, :] < n_valid[:, None]).astype(jnp.int32)
+    grid = (B, KV, n_tbl)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the block table steers the K/V index maps
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, j, bt: (b, k, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), lambda b, k, j, bt: (bt[b, j], 0, k, 0)),
+            pl.BlockSpec((1, page, 1, vd), lambda b, k, j, bt: (bt[b, j], 0, k, 0)),
+            pl.BlockSpec((1, page), lambda b, k, j, bt: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, vd), lambda b, k, j, bt: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, vd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=hd**-0.5, n_s=n_tbl),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, vd), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), qg, k_pool, v_pool, valid_i)
     return out.reshape(B, 1, H, vd)

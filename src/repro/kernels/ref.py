@@ -81,6 +81,42 @@ def decode_attention_ref(q, k_cache, v_cache, valid):
     return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
 
 
+def gather_pages(pool, block_table):
+    """Reassemble a slot-contiguous cache view from a paged pool.
+
+    pool: (P, page, ...) physical pages; block_table: (B, n_tbl) int32 page
+    ids (entries may point at the pool's trash page — callers mask by
+    ``n_valid``, so trash contents are never observed).  Returns
+    (B, n_tbl * page, ...): logical position ``t`` of slot ``b`` lives at
+    ``pool[block_table[b, t // page], t % page]``.
+
+    When the logical depth equals a flat cache's ``max_len``, the gathered
+    tensor is BIT-identical to the flat per-slot cache holding the same
+    writes — which is what makes the paged serving engine's greedy outputs
+    bit-identical to the flat engine's (tests/test_engine_parity.py).
+    """
+    B, n_tbl = block_table.shape
+    page = pool.shape[1]
+    g = pool[block_table]  # (B, n_tbl, page, ...)
+    return g.reshape((B, n_tbl * page) + pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_table, n_valid):
+    """Gather-einsum oracle for the paged flash-decode kernel.
+
+    q: (B, 1, H, hd); pools: (P, page, KV, hd/vd) physical pages shared by
+    all slots; block_table: (B, n_tbl) int32; n_valid: (B,) int32 number of
+    valid logical positions per slot.  Materializes the per-slot gather the
+    Pallas kernel avoids, then defers to :func:`decode_attention_ref` — so
+    the paged and flat paths share one masking/zero-row contract.
+    """
+    k = gather_pages(k_pool, block_table)
+    v = gather_pages(v_pool, block_table)
+    S = k.shape[1]
+    valid = jnp.arange(S)[None, :] < n_valid[:, None]
+    return decode_attention_ref(q, k, v, valid)
+
+
 def flash_attention_ref(q, k, v, *, causal=True):
     """Plain softmax attention oracle.  q/k/v: (B, S, H, hd) (same H)."""
     B, S, H, hd = q.shape

@@ -5,6 +5,7 @@ checkpoint.
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --batch 4 --prompt-len 16 --gen 32 [--engine continuous|static] \
         [--n-slots 4] [--decode-block 8] [--temperature 0.7 --top-k 40] \
+        [--page-size 64 [--kv-pages N] [--prefill-chunk 256]] \
         [--compress-alpha 0.3 --q 4] [--kernels auto|xla|pallas|reference]
 
 ``--engine continuous`` (default) routes requests through
@@ -14,6 +15,13 @@ padded micro-batch prefill, a device-resident FUSED decode loop
 detection on device, KV pool donated through the step), and per-request
 sampling params.  ``--engine static`` keeps the original fixed-shape
 ``greedy_generate`` path.
+
+``--page-size`` switches the continuous engine to the PAGED KV pool:
+fixed-size pages shared by all slots through per-slot block tables,
+admission gated on each request's actual page need (``--kv-pages`` sizes
+the pool; default matches flat capacity), and — with ``--prefill-chunk`` —
+long prompts prefilled chunk-by-chunk interleaved with decode blocks so a
+long prefill no longer stalls running requests.
 
 Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
 overrides the arch config's ``kernels`` field, and the dispatcher's hit
@@ -37,6 +45,16 @@ def main(argv=None):
                     help="cache slots in the pool (default: --batch)")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="decode tokens per host round-trip (continuous engine)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV-cache page size in tokens; 0 = flat slot pool "
+                    "(continuous engine)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="pages in the paged pool; 0 = flat-equivalent "
+                    "capacity (n_slots * ceil(max_len / page_size))")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill prompts longer than this in page-backed "
+                    "chunks interleaved with decode; 0 = monolithic "
+                    "(requires --page-size)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -104,7 +122,10 @@ def main(argv=None):
 
         n_slots = args.n_slots or args.batch
         eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg,
-                     decode_block=args.decode_block)
+                     decode_block=args.decode_block,
+                     page_size=args.page_size or None,
+                     kv_pages=args.kv_pages or None,
+                     prefill_chunk=args.prefill_chunk or None)
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -131,6 +152,12 @@ def main(argv=None):
               f"decode_steps={eng.steps} host_syncs={eng.host_syncs} "
               f"tok_per_sync={eng.tokens_per_sync:.1f} "
               f"util={eng.batch_utilization:.3f}")
+        if eng.paged:
+            print(f"[paged] page_size={eng.page_size} pool={eng.kv_pages} pages "
+                  f"peak_pages={eng.peak_pages_in_use} "
+                  f"peak_active={eng.peak_active} "
+                  f"prefill_chunks={eng.prefill_chunks} "
+                  f"kv_bytes_cap={eng.kv_bytes_capacity}")
         out = np.asarray([done[0].tokens], np.int32)
         print("first sequence:", done[0].tokens[:12])
 

@@ -265,6 +265,58 @@ def chunked_attention(
     return _flash(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_table, n_valid):
+    """One-token attention through a paged KV pool (block-table indirection).
+
+    q: (B, 1, H, hd); pools: (P, page, KV, *) fixed-size physical pages
+    shared by every slot (the LAST physical page is the pool's trash page —
+    see ``trash_page``); block_table: (B, n_tbl) int32; ``n_valid``: scalar
+    or (B,) count of valid logical positions.  Masking is strict per slot
+    exactly as in :func:`decode_attention`; execution goes through the
+    dispatch runtime ("paged_decode_attention"): the block-table Pallas
+    kernel on TPU for deep-enough virtual sequences, the gather-einsum
+    reference elsewhere.
+    """
+    from repro.runtime import dispatch
+
+    nv = position_vector(n_valid, q.shape[0])
+    return dispatch.paged_decode_attention(q, k_pool, v_pool, block_table, nv)
+
+
+def trash_page(pool) -> int:
+    """Physical id of a pool's write-off page (ALWAYS the last one).
+
+    Paged-cache convention: a pool carries ``n_pages`` allocatable pages
+    plus one trailing trash page.  Inactive/frozen slots and padded prefill
+    rows write there; block-table entries beyond a slot's allocation point
+    there.  Its contents are garbage by design and are never attended —
+    every read path masks by ``n_valid`` first.
+    """
+    return pool.shape[0] - 1
+
+
+def _paged_write(pool, block_table, pos_v, rows, *, live=None):
+    """Scatter token rows into their pages: logical position ``pos`` lives at
+    ``pool[table[pos // page], pos % page]``.
+
+    Two shapes: ``block_table`` (B, n_tbl) with one position per slot (the
+    decode step — row b writes through table row b), or a SINGLE table row
+    (n_tbl,) with many positions (a prefill chunk writing one slot's pages).
+    ``live`` (optional bool mask over positions) routes dead rows to the
+    trash page — collisions there are harmless because trash is never read
+    validly.
+    """
+    page = pool.shape[1]
+    idx = jnp.clip(pos_v // page, 0, block_table.shape[-1] - 1)
+    if block_table.ndim == 2:
+        ids = block_table[jnp.arange(pos_v.shape[0]), idx]
+    else:
+        ids = block_table[idx]
+    if live is not None:
+        ids = jnp.where(live, ids, trash_page(pool))
+    return pool.at[ids, pos_v % page].set(rows)
+
+
 def decode_attention(q, k_cache, v_cache, n_valid, *, rotate_mask=None):
     """One-token attention over a cache.  q: (B, 1, H, hd); caches
     (B, S, KV, *).  ``n_valid``: number of valid cache slots — a scalar
@@ -395,6 +447,105 @@ def gqa_decode(p, x, cache, pos, cfg):
 
 
 # --------------------------------------------------------------------------- #
+# Paged GQA (block-table KV pool; continuous-batching serving)
+# --------------------------------------------------------------------------- #
+def gqa_init_cache_paged(cfg, page_size: int, n_pages_phys: int, dtype):
+    """Physical page pools replacing the per-slot (B, S) reservation.
+
+    Returns ``(cache, paged)``.  Sliding-window archs keep their O(window)
+    ring — paging a window-bounded cache banks nothing — so they return
+    ``paged=False`` and the caller falls back to :func:`gqa_init_cache`
+    (the paged-mask tree tells the engine which scatter to use per leaf).
+    """
+    if cfg.sliding_window is not None:
+        return None, False
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_pages_phys, page_size, KV, hd), dtype),
+        "v": jnp.zeros((n_pages_phys, page_size, KV, hd), dtype),
+    }, True
+
+
+def gqa_decode_paged(p, x, cache, pos, cfg, block_table):
+    """Paged-cache twin of :func:`gqa_decode`: the new token's K/V is
+    scattered into the slot's current page and attention walks the block
+    table.  Computes EXACTLY what :func:`gqa_decode` computes on the flat
+    layout (bit-identical when the logical depth matches), with no
+    per-slot worst-case reservation."""
+    B = x.shape[0]
+    pos_v = position_vector(pos, B)
+    q, k, v = _qkv(p, x, cfg, pos_v[:, None], rope=True)
+    k_pool = _paged_write(cache["k"], block_table, pos_v, k[:, 0])
+    v_pool = _paged_write(cache["v"], block_table, pos_v, v[:, 0])
+    out = paged_decode_attention(q, k_pool, v_pool, block_table, pos_v + 1)
+    out = nn.dense(p["wo"], out.reshape(B, 1, -1))
+    return out, {"k": k_pool, "v": v_pool}
+
+
+def _chunk_masked_attention(q, k, v, q_pos):
+    """Causal attention of a prefill CHUNK against a gathered cache view.
+
+    q: (B, C, H, hd) chunk queries at absolute positions ``q_pos`` (B, C);
+    k/v: (B, S, KV, *) the slot's gathered logical cache (chunk K/V already
+    written) — query i attends exactly the logical positions j <= q_pos[i].
+
+    Numerics deliberately MIRROR ``_flash_fwd_pass``'s single-KV-block path
+    (same einsum contractions, probabilities cast to the cache dtype BEFORE
+    the V matmul, the denominator divided out AFTER): masked columns are
+    exact zeros and trailing-zero reductions are exact, so on prompts whose
+    monolithic prefill runs one flash KV block (S <= kv_chunk) chunked
+    prefill is BIT-identical to it — a divide-before-matmul variant was
+    measurably off by an ulp, enough to flip near-tie argmaxes.
+    """
+    B, C, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, C, KV, G, hd)
+    qs = (qg.astype(jnp.float32) * hd**-0.5).astype(q.dtype)
+    s = jnp.einsum(
+        "bqkgh,bckh->bkgqc", qs, k, preferred_element_type=jnp.float32
+    )  # (B, KV, G, C, S) fp32
+    mask = jnp.arange(S)[None, None, :] <= q_pos[:, :, None]  # (B, C, S)
+    mask = mask[:, None, None]  # (B, 1, 1, C, S) broadcast over (KV, G)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])  # masked cols underflow to exactly 0
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum(
+        "bkgqc,bckv->bkgqv", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, C, vd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, v.shape[-1]).astype(q.dtype)
+
+
+def gqa_prefill_chunk(p, x, cache, cfg, bt_row, start, n_real):
+    """One page-backed prefill chunk for a SINGLE slot (B == 1).
+
+    x: (1, C, d) normed chunk activations at absolute positions
+    ``start + [0, C)``; ``bt_row``: the slot's (n_tbl,) block-table row;
+    ``n_real``: how many leading tokens are real (the last chunk of a
+    prompt is right-padded to the static chunk shape — padded rows write to
+    the trash page and their outputs are discarded by the caller).  Writes
+    the chunk's K/V into the slot's pages FIRST, then attends over the
+    gathered logical cache, so intra-chunk causality and attention to all
+    previous chunks fall out of one absolute-position mask.
+    """
+    from repro.kernels.ref import gather_pages
+
+    B, C, _ = x.shape
+    pos = start + jnp.arange(C, dtype=jnp.int32)  # (C,) absolute positions
+    q, k, v = _qkv(p, x, cfg, pos[None, :], rope=True)
+    live = jnp.arange(C) < n_real
+    k_pool = _paged_write(cache["k"], bt_row, pos, k[0], live=live)
+    v_pool = _paged_write(cache["v"], bt_row, pos, v[0], live=live)
+    kk = gather_pages(k_pool, bt_row[None])
+    vv = gather_pages(v_pool, bt_row[None])
+    out = _chunk_masked_attention(q, kk, vv, pos[None, :])
+    out = nn.dense(p["wo"], out.reshape(B, C, -1))
+    return out, {"k": k_pool, "v": v_pool}
+
+
+# --------------------------------------------------------------------------- #
 # Cross-attention (VLM image layers, whisper decoder)
 # --------------------------------------------------------------------------- #
 def cross_attn_init(key, cfg, dtype):
@@ -496,20 +647,10 @@ def mla_init_cache(cfg, batch: int, max_len: int, dtype):
     }
 
 
-def mla_decode(p, x, cache, pos, cfg):
-    """Absorbed-weight MLA decode: attention entirely in latent space.
-    ``pos``: scalar or (B,) per-slot positions (continuous batching)."""
-    B = x.shape[0]
-    H, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+def _mla_absorbed_weights(p, cfg):
+    """(w_uk (lkv,H,nope), w_uv (lkv,H,vd)) for the absorbed decode path."""
+    H, nope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
     lkv = cfg.kv_lora_rank
-    pos_v = position_vector(pos, B)
-    positions = pos_v[:, None]
-    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope),(B,1,H,rope)
-    c_new, kr_new = _mla_latent(p, x, cfg, positions)  # (B,1,lkv),(B,1,rope)
-    b_idx = jnp.arange(B)
-    c_cache = cache["c_kv"].at[b_idx, pos_v].set(c_new[:, 0])
-    r_cache = cache["k_rope"].at[b_idx, pos_v].set(kr_new[:, 0])
-
     w_kv = p["wkv_b"] if not isinstance(p["wkv_b"], dict) else None
     if w_kv is None:
         # factored (RSI-compressed) wkv_b: densify the small latent matrix —
@@ -518,28 +659,108 @@ def mla_decode(p, x, cache, pos, cfg):
 
         w_kv = materialize(p["wkv_b"])
     w_kv = w_kv.reshape(lkv, H, nope + vd)
-    w_uk, w_uv = w_kv[..., :nope], w_kv[..., nope:]
+    return w_kv[..., :nope], w_kv[..., nope:]
 
-    # Absorb: q_lat[b,h,l] = sum_n q_nope[b,h,n] * w_uk[l,h,n].
+
+def _mla_scores_and_context(p, cfg, q_nope, q_rope, c_cache, r_cache, valid):
+    """Absorbed-weight latent attention shared by the flat decode, the paged
+    decode and the paged chunk prefill.  q_nope/q_rope: (B, C, H, *) queries
+    (C == 1 for decode); caches: (B, S, *) latent views; valid: (B, C, S)
+    bool.  Returns (B, C, H * vd) context, pre-``wo``."""
+    B, C, H, _ = q_nope.shape
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    w_uk, w_uv = _mla_absorbed_weights(p, cfg)
+    # Absorb: q_lat[b,c,h,l] = sum_n q_nope[b,c,h,n] * w_uk[l,h,n].
     # Caches stay in their storage dtype (fp32 accumulation via
     # preferred_element_type) — an astype would copy the whole latent cache.
     q_lat = jnp.einsum(
-        "bhn,lhn->bhl", q_nope[:, 0], w_uk, preferred_element_type=jnp.float32
+        "bchn,lhn->bchl", q_nope, w_uk, preferred_element_type=jnp.float32
     ).astype(c_cache.dtype)
     scale = (nope + rope_d) ** -0.5
     s = (
-        jnp.einsum("bhl,bsl->bhs", q_lat, c_cache, preferred_element_type=jnp.float32)
+        jnp.einsum("bchl,bsl->bchs", q_lat, c_cache, preferred_element_type=jnp.float32)
         + jnp.einsum(
-            "bhr,bsr->bhs", q_rope[:, 0], r_cache, preferred_element_type=jnp.float32
+            "bchr,bsr->bchs", q_rope, r_cache, preferred_element_type=jnp.float32
         )
     ) * scale
-    valid = jnp.arange(c_cache.shape[1])[None, :] <= pos_v[:, None]
-    s = jnp.where(valid[:, None], s, NEG_INF)
+    s = jnp.where(valid[:, :, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum(
-        "bhs,bsl->bhl", w.astype(c_cache.dtype), c_cache, preferred_element_type=jnp.float32
+        "bchs,bsl->bchl", w.astype(c_cache.dtype), c_cache,
+        preferred_element_type=jnp.float32,
     ).astype(c_cache.dtype)
-    out = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_uv, preferred_element_type=jnp.float32)
-    out = out.reshape(B, 1, H * vd).astype(x.dtype)
+    out = jnp.einsum("bchl,lhv->bchv", ctx_lat, w_uv, preferred_element_type=jnp.float32)
+    return out.reshape(B, C, H * vd)
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """Absorbed-weight MLA decode: attention entirely in latent space.
+    ``pos``: scalar or (B,) per-slot positions (continuous batching)."""
+    B = x.shape[0]
+    pos_v = position_vector(pos, B)
+    positions = pos_v[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,nope),(B,1,H,rope)
+    c_new, kr_new = _mla_latent(p, x, cfg, positions)  # (B,1,lkv),(B,1,rope)
+    b_idx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[b_idx, pos_v].set(c_new[:, 0])
+    r_cache = cache["k_rope"].at[b_idx, pos_v].set(kr_new[:, 0])
+    valid = jnp.arange(c_cache.shape[1])[None, :] <= pos_v[:, None]
+    out = _mla_scores_and_context(
+        p, cfg, q_nope, q_rope, c_cache, r_cache, valid[:, None]
+    ).astype(x.dtype)
     out = nn.dense(p["wo"], out)
     return out, {"c_kv": c_cache, "k_rope": r_cache}
+
+
+def mla_init_cache_paged(cfg, page_size: int, n_pages_phys: int, dtype):
+    """Latent-space page pools (the MLA analogue of gqa_init_cache_paged)."""
+    return {
+        "c_kv": jnp.zeros((n_pages_phys, page_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((n_pages_phys, page_size, cfg.qk_rope_dim), dtype),
+    }, True
+
+
+def mla_decode_paged(p, x, cache, pos, cfg, block_table):
+    """Paged-cache MLA decode: latent writes go through the block table and
+    scoring runs over the gathered logical view (XLA gather-einsum — a
+    Pallas latent-space kernel is a ROADMAP open item, same as the flat
+    MLA decode path)."""
+    from repro.kernels.ref import gather_pages
+
+    B = x.shape[0]
+    pos_v = position_vector(pos, B)
+    positions = pos_v[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_new, kr_new = _mla_latent(p, x, cfg, positions)
+    c_pool = _paged_write(cache["c_kv"], block_table, pos_v, c_new[:, 0])
+    r_pool = _paged_write(cache["k_rope"], block_table, pos_v, kr_new[:, 0])
+    c_cache = gather_pages(c_pool, block_table)  # (B, S_log, lkv)
+    r_cache = gather_pages(r_pool, block_table)
+    valid = jnp.arange(c_cache.shape[1])[None, :] <= pos_v[:, None]
+    out = _mla_scores_and_context(
+        p, cfg, q_nope, q_rope, c_cache, r_cache, valid[:, None]
+    ).astype(x.dtype)
+    out = nn.dense(p["wo"], out)
+    return out, {"c_kv": c_pool, "k_rope": r_pool}
+
+
+def mla_prefill_chunk(p, x, cache, cfg, bt_row, start, n_real):
+    """One page-backed MLA prefill chunk for a single slot (B == 1); see
+    :func:`gqa_prefill_chunk` for the write-then-attend contract."""
+    from repro.kernels.ref import gather_pages
+
+    B, C, _ = x.shape
+    pos = start + jnp.arange(C, dtype=jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, pos[None, :])  # (1,C,H,*)
+    c_new, kr_new = _mla_latent(p, x, cfg, pos[None, :])  # (1,C,*)
+    live = jnp.arange(C) < n_real
+    c_pool = _paged_write(cache["c_kv"], bt_row, pos, c_new[0], live=live)
+    r_pool = _paged_write(cache["k_rope"], bt_row, pos, kr_new[0], live=live)
+    c_cache = gather_pages(c_pool, bt_row[None])
+    r_cache = gather_pages(r_pool, bt_row[None])
+    valid = jnp.arange(c_cache.shape[1])[None, None, :] <= pos[None, :, None]
+    out = _mla_scores_and_context(
+        p, cfg, q_nope, q_rope, c_cache, r_cache, valid
+    ).astype(x.dtype)
+    out = nn.dense(p["wo"], out)
+    return out, {"c_kv": c_pool, "k_rope": r_pool}

@@ -22,6 +22,7 @@ __all__ = [
     "encdec_forward",
     "encdec_encode",
     "encdec_init_cache",
+    "encdec_init_cache_paged",
     "encdec_prefill",
     "encdec_decode_step",
 ]
@@ -158,6 +159,35 @@ def encdec_init_cache(cfg, batch_size: int, max_len: int):
     }
 
 
+def encdec_init_cache_paged(cfg, batch_size: int, max_len: int, *, page_size: int, n_pages: int):
+    """Paged decoder cache: self-KV page pools + block table; the encoder
+    cross-KV (fixed ``n_audio_frames`` per slot) stays slot-resident.
+    Returns ``(cache, paged_mask)`` — see lm.lm_init_cache_paged."""
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    H, hd, T = cfg.n_heads, cfg.head_dim, cfg.n_audio_frames
+    max_pages = -(-max_len // page_size)
+    self_c, paged = attn.gqa_init_cache_paged(cfg, page_size, n_pages + 1, dtype)
+    assert paged, "whisper decoder self-attention has no sliding window"
+    self_stack = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (L,) + a.shape).copy(), self_c
+    )
+    cross = {
+        "k": jnp.zeros((L, batch_size, T, H, hd), dtype),
+        "v": jnp.zeros((L, batch_size, T, H, hd), dtype),
+    }
+    cache = {
+        "self": self_stack,
+        "cross_kv": cross,
+        "block_table": jnp.full((batch_size, max_pages), n_pages, jnp.int32),
+    }
+    mask = {
+        "self": jax.tree_util.tree_map(lambda _: True, self_stack),
+        "cross_kv": jax.tree_util.tree_map(lambda _: False, cross),
+    }
+    return cache, mask
+
+
 def encdec_prefill(p, batch, cfg, max_len: int, *, last_index=None):
     """Encode frames + run the decoder prompt, building both caches.
 
@@ -208,18 +238,28 @@ def encdec_prefill(p, batch, cfg, max_len: int, *, last_index=None):
 
 
 def encdec_decode_step(p, cache, tokens, pos, cfg):
-    """``pos``: scalar or (B,) per-slot positions (continuous batching)."""
+    """``pos``: scalar or (B,) per-slot positions (continuous batching).
+    A ``block_table`` leaf in the cache (encdec_init_cache_paged) routes
+    self-attention through the paged decode path."""
     dtype = jnp.dtype(cfg.dtype)
     B = tokens.shape[0]
     pos_v = attn.position_vector(pos, B)
-    pe = nn.sinusoidal_positions(cache["self"]["k"].shape[2], cfg.d_model)
+    bt = cache.get("block_table")
+    if bt is None:
+        pe_len = cache["self"]["k"].shape[2]
+    else:
+        pe_len = bt.shape[1] * cache["self"]["k"].shape[2]  # pages * page_size
+    pe = nn.sinusoidal_positions(pe_len, cfg.d_model)
     x = nn.embed_lookup(p["embed"], tokens) + pe[pos_v][:, None].astype(dtype)
 
     def step(carry, inp):
         lp, c = inp
         h = carry
         hh = nn.layernorm(lp["attn_norm"], h, cfg.norm_eps)
-        a, c_self = attn.gqa_decode(lp["attn"], hh, c["self"], pos_v, cfg)
+        if bt is None:
+            a, c_self = attn.gqa_decode(lp["attn"], hh, c["self"], pos_v, cfg)
+        else:
+            a, c_self = attn.gqa_decode_paged(lp["attn"], hh, c["self"], pos_v, cfg, bt)
         h = h + a
         hh = nn.layernorm(lp["cross_norm"], h, cfg.norm_eps)
         kv = (c["cross_kv"]["k"], c["cross_kv"]["v"])
@@ -228,7 +268,11 @@ def encdec_decode_step(p, cache, tokens, pos, cfg):
         h = h + _ffn(lp["mlp"], hh)
         return h, {"self": c_self, "cross_kv": c["cross_kv"]}
 
-    x, new_cache = jax.lax.scan(step, x, (p["dec_layers"], cache))
+    layer_cache = {"self": cache["self"], "cross_kv": cache["cross_kv"]}
+    x, new_layers = jax.lax.scan(step, x, (p["dec_layers"], layer_cache))
     x = nn.layernorm(p["dec_norm"], x, cfg.norm_eps)
     logits = nn.dense(p["lm_head"], x).astype(jnp.float32)[:, 0]
+    new_cache = dict(new_layers)
+    if bt is not None:
+        new_cache["block_table"] = bt
     return logits, new_cache

@@ -25,7 +25,9 @@ __all__ = [
     "lm_init",
     "lm_forward",
     "lm_init_cache",
+    "lm_init_cache_paged",
     "lm_prefill",
+    "lm_prefill_chunk",
     "lm_decode_step",
 ]
 
@@ -383,6 +385,95 @@ def lm_init_cache(cfg, batch_size: int, max_len: int):
     raise ValueError(fam)
 
 
+def _mask_like(tree, paged: bool):
+    return jax.tree_util.tree_map(lambda _: paged, tree)
+
+
+def _layer_cache_init_paged(cfg, batch, max_len, dtype, page_size, n_phys, *, layer_kind):
+    """(one_layer_cache, paged?) — paged leaves swap (B, S) for (P, page)."""
+    if layer_kind == "mamba":
+        return ssm_mod.mamba2_init_cache(cfg, batch, dtype), False
+    if layer_kind == "mla":
+        return attn.mla_init_cache_paged(cfg, page_size, n_phys, dtype)
+    c, paged = attn.gqa_init_cache_paged(cfg, page_size, n_phys, dtype)
+    if not paged:  # sliding-window ring stays slot-resident
+        return attn.gqa_init_cache(cfg, batch, max_len, dtype), False
+    return c, paged
+
+
+def lm_init_cache_paged(cfg, batch_size: int, max_len: int, *, page_size: int, n_pages: int):
+    """Paged decode cache: physical page pools + per-slot block table.
+
+    Per-token cache leaves trade their (B, S) slot reservation for
+    (n_pages + 1, page_size) physical pools shared by every slot (the +1 is
+    the trailing trash page — attention.trash_page); per-slot state that is
+    O(1) or window-bounded (mamba conv/state, SWA rings, VLM cross-KV)
+    keeps the slot layout.  The (batch, max_pages) ``block_table`` rides in
+    the cache pytree — initialized to the trash id, rewritten per slot by
+    the engine at admission — and is shared by every layer.
+
+    Returns ``(cache, paged_mask)`` where ``paged_mask`` mirrors the cache
+    structure (sans block_table) with one bool per leaf, so the engine
+    knows which scatter (page vs slot) each prefill leaf takes.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    n_phys = n_pages + 1
+    max_pages = -(-max_len // page_size)
+
+    def stack(n, kind):
+        one, paged = _layer_cache_init_paged(
+            cfg, batch_size, max_len, dtype, page_size, n_phys, layer_kind=kind
+        )
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one
+        )
+        return stacked, _mask_like(stacked, paged)
+
+    if fam == "dense":
+        c, m = stack(cfg.n_layers, "gqa")
+        cache, mask = {"layers": c}, {"layers": m}
+    elif fam == "moe":
+        kind = "mla" if cfg.kv_lora_rank else "gqa"
+        c, m = stack(cfg.n_layers - cfg.first_dense_layers, kind)
+        cache, mask = {"layers": c}, {"layers": m}
+        if cfg.first_dense_layers:
+            c0, m0 = stack(cfg.first_dense_layers, kind)
+            cache["dense_layers"], mask["dense_layers"] = c0, m0
+    elif fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+        one_self, paged = _layer_cache_init_paged(
+            cfg, batch_size, max_len, dtype, page_size, n_phys, layer_kind="gqa"
+        )
+        self_stack = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_groups, n_self) + a.shape).copy(), one_self
+        )
+        H, hd, T = cfg.n_heads, cfg.head_dim, cfg.n_image_tokens
+        cross_kv = {
+            "k": jnp.zeros((n_groups, batch_size, T, H, hd), dtype),
+            "v": jnp.zeros((n_groups, batch_size, T, H, hd), dtype),
+        }
+        cache = {"layers": {"self": self_stack, "cross_kv": cross_kv}}
+        mask = {"layers": {
+            "self": _mask_like(self_stack, paged),
+            "cross_kv": _mask_like(cross_kv, False),
+        }}
+    elif fam == "hybrid":
+        n_apps = len([s for s in _hybrid_segments(cfg) if s[1]])
+        c, m = stack(cfg.n_layers, "mamba")
+        ca, ma = stack(n_apps, "gqa")
+        cache = {"layers": c, "shared_attn": ca}
+        mask = {"layers": m, "shared_attn": ma}
+    elif fam == "ssm":
+        c, m = stack(cfg.n_layers, "mamba")
+        cache, mask = {"layers": c}, {"layers": m}
+    else:
+        raise ValueError(fam)
+    cache["block_table"] = jnp.full((batch_size, max_pages), n_pages, jnp.int32)
+    return cache, mask
+
+
 def stack_groups_vlm(cfg, batch_size, max_len, dtype, n_groups):
     n_self = cfg.cross_attn_every - 1
     one_self = attn.gqa_init_cache(cfg, batch_size, max_len, dtype)
@@ -560,16 +651,109 @@ def lm_prefill(p, batch, cfg, max_len: int, *, last_index=None):
     return logits, cache
 
 
+def lm_prefill_chunk(p, cache, tokens, cfg, *, bt_row, start, n_real):
+    """One page-aligned chunk of a long prompt's prefill (paged cache only).
+
+    tokens: (1, C) int32 — the chunk at absolute positions ``start + [0, C)``
+    of one slot's prompt, right-padded when fewer than C real tokens remain
+    (``n_real`` of them are real; padded rows write to the trash page).
+    ``bt_row``: the slot's (n_tbl,) page ids, passed EXPLICITLY rather than
+    read from ``cache["block_table"]`` — the engine keeps the device table's
+    row pointed at trash until the last chunk lands, so the fused decode
+    block's frozen-slot re-feeds (which write through the table at position
+    0) cannot corrupt a half-prefilled slot's pages.
+
+    Each attention layer writes the chunk's K/V into the slot's pages, then
+    attends over the gathered logical cache with an absolute-position
+    causal mask — chunk-by-chunk prefill computes the same function as the
+    monolithic prefill (bit-identical to its single-flash-block path; see
+    attention._chunk_masked_attention).  Supported for the attention
+    families whose prefill has no cross-chunk recurrent state (dense + moe,
+    no sliding window) — build_model gates ``prefill_chunk`` accordingly;
+    other families prefill monolithically.
+
+    Returns ``(last_logits (1, Vp), cache)`` where ``last_logits`` is taken
+    at the chunk's last REAL token — only the final chunk's logits are
+    meaningful to the caller.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe") or cfg.sliding_window is not None:
+        raise ValueError(f"chunked prefill unsupported for family {fam!r}")
+    B, C = tokens.shape
+    bt_row = jnp.asarray(bt_row, jnp.int32).reshape(-1)  # (n_tbl,)
+    x = nn.embed_lookup(p["embed"], tokens)
+    mla = bool(cfg.kv_lora_rank)
+
+    def chunk_body(lp, h, c):
+        hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        if mla:
+            a, c2 = attn.mla_prefill_chunk(lp["attn"], hh, c, cfg, bt_row, start, n_real)
+        else:
+            a, c2 = attn.gqa_prefill_chunk(lp["attn"], hh, c, cfg, bt_row, start, n_real)
+        h = h + a
+        hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
+        if "moe" in lp:
+            m, _ = moe_mod.moe_forward(lp["moe"], hh, cfg)
+        else:
+            m = moe_mod.ffn_forward(lp["mlp"], hh)
+        return h + m, c2
+
+    def scan_chunk(stack, caches, h):
+        # layer scan with the page pools as CARRY (same in-place aliasing
+        # rationale as lm_decode_step.scan_steps)
+        n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+
+        def body(carry, inp):
+            h, cs = carry
+            lp, i = inp
+            c = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False), cs
+            )
+            h2, c2 = chunk_body(lp, h, c)
+            cs2 = jax.tree_util.tree_map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, i, axis=0),
+                cs,
+                c2,
+            )
+            return (h2, cs2), None
+
+        (h, caches), _ = jax.lax.scan(body, (h, caches), (stack, jnp.arange(n)))
+        return h, caches
+
+    new_cache = dict(cache)
+    if "dense_layers" in p:
+        x, c0 = scan_chunk(p["dense_layers"], cache["dense_layers"], x)
+        new_cache["dense_layers"] = c0
+    x, c = scan_chunk(p["layers"], cache["layers"], x)
+    new_cache["layers"] = c
+    x = nn.rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    last = x[jnp.arange(B), jnp.clip(n_real - 1, 0, C - 1)][:, None, :]
+    logits = _logits(p, last, cfg)[:, 0]
+    return logits, new_cache
+
+
 def lm_decode_step(p, cache, tokens, pos, cfg):
     """tokens: (B, 1) int32; pos: scalar or (B,) per-slot positions
-    (continuous batching).  Returns (logits (B,Vp), cache)."""
+    (continuous batching).  Returns (logits (B,Vp), cache).
+
+    A cache built by :func:`lm_init_cache_paged` carries a ``block_table``
+    leaf; its presence routes per-token attention caches through the paged
+    decode twins (block-table writes + the "paged_decode_attention" dispatch
+    op) while slot-resident leaves (mamba state, SWA rings, cross-KV) keep
+    the flat step — same logits either way.
+    """
     B = tokens.shape[0]
     x = nn.embed_lookup(p["embed"], tokens)
     fam = cfg.family
+    bt = cache.get("block_table")
+    paged_attn = bt is not None and cfg.sliding_window is None
 
     def gqa_step(lp, h, c):
         hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
-        a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
+        if paged_attn:
+            a, c2 = attn.gqa_decode_paged(lp["attn"], hh, c, pos, cfg, bt)
+        else:
+            a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
         h = h + a
         hh = nn.rmsnorm(lp["mlp_norm"], h, cfg.norm_eps)
         return h + moe_mod.ffn_forward(lp["mlp"], hh), c2
@@ -577,7 +761,12 @@ def lm_decode_step(p, cache, tokens, pos, cfg):
     def moe_step(lp, h, c, *, mla):
         hh = nn.rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
         if mla:
-            a, c2 = attn.mla_decode(lp["attn"], hh, c, pos, cfg)
+            if paged_attn:
+                a, c2 = attn.mla_decode_paged(lp["attn"], hh, c, pos, cfg, bt)
+            else:
+                a, c2 = attn.mla_decode(lp["attn"], hh, c, pos, cfg)
+        elif paged_attn:
+            a, c2 = attn.gqa_decode_paged(lp["attn"], hh, c, pos, cfg, bt)
         else:
             a, c2 = attn.gqa_decode(lp["attn"], hh, c, pos, cfg)
         h = h + a
@@ -669,7 +858,12 @@ def lm_decode_step(p, cache, tokens, pos, cfg):
                 if with_attn:
                     sc = jax.tree_util.tree_map(lambda a: a[shared_i], shared_cache)
                     hh = nn.rmsnorm(p["shared_attn"]["attn_norm"], x, cfg.norm_eps)
-                    a, sc2 = attn.gqa_decode(p["shared_attn"]["attn"], hh, sc, pos, cfg)
+                    if paged_attn:
+                        a, sc2 = attn.gqa_decode_paged(
+                            p["shared_attn"]["attn"], hh, sc, pos, cfg, bt
+                        )
+                    else:
+                        a, sc2 = attn.gqa_decode(p["shared_attn"]["attn"], hh, sc, pos, cfg)
                     x = x + a
                     hh = nn.rmsnorm(p["shared_attn"]["mlp_norm"], x, cfg.norm_eps)
                     x = x + moe_mod.ffn_forward(p["shared_attn"]["mlp"], hh)

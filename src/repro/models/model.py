@@ -29,11 +29,22 @@ class ModelApi:
     # (params, batch, max_len, *, last_index=None) — last_index: per-seq
     # index of the last valid prompt token for right-padded micro-batches
     prefill: Callable[..., tuple]
-    # (params, cache, tokens, pos) — pos: scalar or (B,) per-slot vector
+    # (params, cache, tokens, pos) — pos: scalar or (B,) per-slot vector.
+    # Caches built by init_cache_paged (block_table leaf) route per-token
+    # attention through the paged decode path automatically.
     decode_step: Callable[[Any, Any, jax.Array, jax.Array], tuple]
     # chunked-loss training path: trunk features + per-chunk head apply
     forward_features: Any = None  # (params, batch) -> (feats (B,S,d), aux)
     head_apply: Any = None  # (params, x) -> logits fp32
+    # (batch, max_len, page_size, n_pages) -> (paged cache, paged_mask):
+    # physical page pools + block table for the paged serving engine
+    init_cache_paged: Any = None
+    # (params, cache, tokens (1,C), bt_row, start, n_real) -> (logits,
+    # cache): one page-aligned prefill chunk writing through the slot's
+    # block-table row; None for families whose prefill carries cross-chunk
+    # recurrent/window state (ssm, hybrid, swa, vlm, audio) — the engine
+    # falls back to monolithic prefill there
+    prefill_chunk: Any = None
 
 
 def build_model(cfg: ArchConfig) -> ModelApi:
@@ -47,7 +58,11 @@ def build_model(cfg: ArchConfig) -> ModelApi:
             decode_step=lambda p, c, t, pos: ed_mod.encdec_decode_step(p, c, t, pos, cfg),
             forward_features=lambda p, b: ed_mod.encdec_forward_features(p, b, cfg),
             head_apply=lambda p, x: ed_mod.encdec_head_apply(p, x, cfg),
+            init_cache_paged=lambda bs, ml, ps, npg: ed_mod.encdec_init_cache_paged(
+                cfg, bs, ml, page_size=ps, n_pages=npg
+            ),
         )
+    chunkable = cfg.family in ("dense", "moe") and cfg.sliding_window is None
     return ModelApi(
         cfg=cfg,
         init=lambda key: lm_mod.lm_init(key, cfg),
@@ -57,6 +72,18 @@ def build_model(cfg: ArchConfig) -> ModelApi:
         decode_step=lambda p, c, t, pos: lm_mod.lm_decode_step(p, c, t, pos, cfg),
         forward_features=lambda p, b: lm_mod.lm_forward_features(p, b, cfg),
         head_apply=lambda p, x: lm_mod.lm_head_apply(p, x, cfg),
+        init_cache_paged=lambda bs, ml, ps, npg: lm_mod.lm_init_cache_paged(
+            cfg, bs, ml, page_size=ps, n_pages=npg
+        ),
+        prefill_chunk=(
+            (
+                lambda p, c, t, bt_row, start, n_real: lm_mod.lm_prefill_chunk(
+                    p, c, t, cfg, bt_row=bt_row, start=start, n_real=n_real
+                )
+            )
+            if chunkable
+            else None
+        ),
     )
 
 

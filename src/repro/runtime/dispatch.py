@@ -36,7 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lowrank_matmul import (
     DEFAULT_VMEM_LIMIT,
@@ -59,12 +62,14 @@ __all__ = [
     "use_dispatch",
     "choose_lowrank_path",
     "choose_decode_path",
+    "choose_paged_decode_path",
     "lowrank_apply",
     "dense_apply",
     "sketch_matmul",
     "ssd_scan",
     "flash_attention",
     "decode_attention",
+    "paged_decode_attention",
     "counters",
     "counters_by_path",
     "reset_counters",
@@ -79,6 +84,7 @@ OPS = (
     "ssd_scan",
     "flash_attention",
     "decode_attention",
+    "paged_decode_attention",
 )
 
 # auto table: below this cache depth the flash-decode kernel's grid overhead
@@ -426,3 +432,60 @@ def decode_attention(q, k_cache, v_cache, valid):
             q, k_cache, v_cache, valid, interpret=_interpret(config, platform)
         )
     return _ref.decode_attention_ref(q, k_cache, v_cache, valid)
+
+
+def choose_paged_decode_path(
+    q_shape,
+    pool_shape,
+    n_tbl: int,
+    *,
+    config: Optional[DispatchConfig] = None,
+    platform: Optional[str] = None,
+) -> str:
+    """Auto table for BLOCK-TABLE decode attention: "pallas" or "xla".
+
+    Same shape logic as :func:`choose_decode_path` with the cache depth
+    measured LOGICALLY (``n_tbl`` block-table entries x page tokens): on TPU
+    a deep-enough virtual sequence amortizes the paged kernel's grid, while
+    short tables and non-TPU platforms take the gather-einsum reference
+    (kernels/ref.paged_decode_attention_ref).  Pins behave as everywhere
+    else: "pallas" forces the kernel (interpret off-TPU), "xla"/"reference"
+    force the gather.
+    """
+    config = config or active_dispatch()
+    platform = _platform(platform)
+    be = config.backend_for("paged_decode_attention")
+    if be == "pallas":
+        return "pallas"
+    if be in ("xla", "reference"):
+        return "xla"
+    if platform == "tpu" and n_tbl * pool_shape[1] >= DECODE_MIN_SEQ:
+        return "pallas"
+    return "xla"
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, n_valid):
+    """One-token GQA attention through a paged KV pool (continuous batching).
+
+    q: (B, 1, H, hd); pools: (P, page, KV, hd/vd) physical pages shared by
+    every slot; block_table: (B, n_tbl) int32 page ids; n_valid: (B,) int32
+    valid logical positions.  The Pallas kernel streams pages through the
+    block table with scalar-prefetch index maps (no per-slot gather is ever
+    materialized); the XLA path gathers and defers to the flat einsum
+    oracle.  Fully-masked rows produce zeros on both paths.
+    """
+    config = active_dispatch()
+    platform = _platform(None)
+    n_tbl = block_table.shape[1]
+    path = choose_paged_decode_path(
+        q.shape, k_pool.shape, n_tbl, config=config, platform=platform
+    )
+    B, _, H, hd = q.shape
+    P, page, KV = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    _record("paged_decode_attention", path, (B, P, page, n_tbl, KV, H // KV, hd))
+    if path == "pallas":
+        return paged_decode_attention_pallas(
+            q, k_pool, v_pool, block_table, n_valid,
+            interpret=_interpret(config, platform),
+        )
+    return _ref.paged_decode_attention_ref(q, k_pool, v_pool, block_table, n_valid)

@@ -1,14 +1,16 @@
 """Continuous-batching serving subsystem.
 
 Public surface:
-  * :class:`Engine` / :class:`Request` — slotted KV-cache pool engine
+  * :class:`Engine` / :class:`Request` — KV-pool engine (flat slots or a
+    paged pool with block tables + chunked prefill via ``page_size=``)
   * :class:`SamplingParams` — greedy / temperature / top-k, explicit PRNG
-  * :class:`SlotAllocator` / :class:`Scheduler` — admission control
+  * :class:`SlotAllocator` / :class:`PageAllocator` / :class:`Scheduler` —
+    admission control (slot- and page-gated)
 """
 
 from repro.serving.engine import Engine, Request
 from repro.serving.sampling import SamplingParams, sample_tokens
-from repro.serving.scheduler import Scheduler, SlotAllocator
+from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
 
 __all__ = [
     "Engine",
@@ -17,4 +19,5 @@ __all__ = [
     "sample_tokens",
     "Scheduler",
     "SlotAllocator",
+    "PageAllocator",
 ]

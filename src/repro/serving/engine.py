@@ -1,7 +1,16 @@
-"""Continuous-batching serving engine over a slotted KV-cache pool.
+"""Continuous-batching serving engine over a slotted or PAGED KV-cache pool.
 
 The engine owns ONE batched decode cache of ``n_slots`` rows (the pool) and
-runs an admit -> prefill -> fused-decode loop:
+runs an admit -> prefill -> fused-decode loop.  With ``page_size`` set, the
+per-token cache leaves instead live in a shared pool of fixed-size PAGES
+indexed through per-slot block tables: admission is gated on each request's
+actual page need rather than an ``n_slots x max_len`` worst-case
+reservation (so equal KV bytes admit strictly more concurrent requests),
+decode attention goes through the block-table kernel path
+("paged_decode_attention" in runtime/dispatch.py), and — with
+``prefill_chunk`` — long prompts prefill in page-aligned chunks interleaved
+with decode blocks, bounding the TTFT impact a long prefill has on running
+requests.  The flat loop:
 
   * requests (prompt tokens, max_new_tokens, sampling params) enter a FIFO
     queue (:mod:`repro.serving.scheduler`) and are assigned cache slots as
@@ -58,7 +67,7 @@ from repro.serving.sampling import (
     sample_tokens,
     token_salts,
 )
-from repro.serving.scheduler import Scheduler, SlotAllocator
+from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
 
 __all__ = ["Request", "Engine", "SamplingParams", "percentile"]
 
@@ -129,6 +138,19 @@ def _cache_batch_axis(leaf) -> int:
     return 2 if leaf.ndim == 6 else 1
 
 
+def _scatter_slot_leaf(pl, pr, idx, n_slots: int):
+    """Write micro-batch rows of ONE slot-resident leaf into pool rows."""
+    ax = _cache_batch_axis(pl)
+    if pl.shape[ax] != n_slots:  # fail loudly if the layout rule drifts
+        raise ValueError(
+            f"cache leaf {pl.shape} does not carry the slot dim "
+            f"({n_slots}) on axis {ax}; _cache_batch_axis out of date?"
+        )
+    rows = jnp.moveaxis(pr, ax, 0)[: idx.shape[0]]
+    merged = jnp.moveaxis(pl, ax, 0).at[idx].set(rows)
+    return jnp.moveaxis(merged, 0, ax)
+
+
 def _scatter_slots(pool, part, slots, n_slots: int):
     """Write micro-batch cache rows into pool rows ``slots`` (leaf-wise).
 
@@ -136,19 +158,50 @@ def _scatter_slots(pool, part, slots, n_slots: int):
     with dummy rows); only the first ``len(slots)`` rows are written.
     """
     idx = jnp.asarray(slots, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda pl, pr: _scatter_slot_leaf(pl, pr, idx, n_slots), pool, part
+    )
 
-    def leaf(pl, pr):
-        ax = _cache_batch_axis(pl)
-        if pl.shape[ax] != n_slots:  # fail loudly if the layout rule drifts
-            raise ValueError(
-                f"cache leaf {pl.shape} does not carry the slot dim "
-                f"({n_slots}) on axis {ax}; _cache_batch_axis out of date?"
-            )
-        rows = jnp.moveaxis(pr, ax, 0)[: idx.shape[0]]
-        merged = jnp.moveaxis(pl, ax, 0).at[idx].set(rows)
-        return jnp.moveaxis(merged, 0, ax)
 
-    return jax.tree_util.tree_map(leaf, pool, part)
+def _scatter_page_leaf(pl, pr, bt_rows, page: int):
+    """Write micro-batch rows of ONE paged leaf into its page pool.
+
+    pr: the flat prefill leaf — slot-batch at ``ax``, sequence (padded to
+    max_len by the model) at ``ax + 1``; pl: the pool with (P_phys, page)
+    at the same axes.  Row g's sequence is cut into page-sized runs and
+    scattered to the page ids in ``bt_rows[g]`` — allocated pages for the
+    admitted request, the trash page for dummy rows and the unallocated
+    tail (collisions on trash are harmless; it is never read validly).
+    Every allocated page gets fully overwritten (the model zero-pads prompt
+    KV to max_len), so slot reuse can never leak a previous occupant's
+    cache through recycled pages.
+    """
+    ax = _cache_batch_axis(pl)
+    G, S = pr.shape[ax], pr.shape[ax + 1]
+    n_chunk = -(-S // page)
+    pr2 = jnp.moveaxis(pr, (ax, ax + 1), (0, 1))  # (G, S, rest...)
+    if n_chunk * page != S:
+        pad = [(0, n_chunk * page - S)] + [(0, 0)] * (pr2.ndim - 2)
+        pr2 = jnp.pad(pr2, [(0, 0)] + pad)
+    rows = pr2.reshape((G * n_chunk, page) + pr2.shape[2:])
+    ids = bt_rows[:, :n_chunk].reshape(-1)
+    pl2 = jnp.moveaxis(pl, (ax, ax + 1), (0, 1))  # (P_phys, page, rest...)
+    merged = pl2.at[ids].set(rows)
+    return jnp.moveaxis(merged, (0, 1), (ax, ax + 1))
+
+
+def _scatter_mixed(pool, part, paged_mask, slots, n_slots, bt_rows, page):
+    """Leaf-wise prefill scatter for a paged cache: page-pool leaves go
+    through their block-table rows, slot-resident leaves (mamba state, SWA
+    rings, cross-KV) through the classic row scatter."""
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def leaf(pl, pr, is_paged):
+        if is_paged:
+            return _scatter_page_leaf(pl, pr, bt_rows, page)
+        return _scatter_slot_leaf(pl, pr, idx, n_slots)
+
+    return jax.tree_util.tree_map(leaf, pool, part, paged_mask)
 
 
 def _next_pow2(n: int, floor: int) -> int:
@@ -170,13 +223,31 @@ def _seed32(seed: int) -> int:
 
 
 class Engine:
-    """Continuous-batching engine binding (model, params) to a slot pool.
+    """Continuous-batching engine binding (model, params) to a KV pool.
 
     ``decode_block``: decode tokens per host round-trip.  The fused step
     scans this many device decode iterations between host syncs; 1 recovers
     the classic token-at-a-time loop (useful for debugging), the default 8
     amortizes host dispatch/transfer to <= 1 sync per 8 decoded tokens per
     slot.
+
+    ``page_size`` switches the pool to PAGED mode: per-token cache leaves
+    live in a shared pool of ``kv_pages`` fixed-size pages (plus one trash
+    page) indexed through per-slot block tables, and admission is gated on
+    a request's ACTUAL page need (``ceil((prompt + max_new) / page_size)``,
+    reserved up front so decode never strands) instead of an ``n_slots x
+    max_len`` worst-case reservation — so at equal KV bytes the paged pool
+    admits strictly more concurrent requests whenever real footprints are
+    below worst case.  ``kv_pages`` defaults to flat-equivalent capacity
+    (``n_slots * ceil(max_len / page_size)``); benchmarks lower it to bank
+    the savings.  Greedy outputs are bit-identical to the flat engine (the
+    block table only relocates bytes, never changes what is attended).
+
+    ``prefill_chunk`` (paged mode, families without cross-chunk prefill
+    state) additionally splits prompts longer than the chunk into fixed
+    chunks processed ONE per engine step, interleaved with decode blocks —
+    a long prompt's prefill no longer stalls running decodes for its whole
+    length, bounding TTFT for short requests under long-prompt traffic.
     """
 
     def __init__(
@@ -189,6 +260,9 @@ class Engine:
         dispatch: Optional[DispatchConfig] = None,
         eos_token: Optional[int] = None,
         decode_block: int = 8,
+        page_size: Optional[int] = None,
+        kv_pages: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
@@ -198,10 +272,61 @@ class Engine:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         self.decode_block = decode_block
         self._dcfg = dispatch if dispatch is not None else DispatchConfig.from_arch(self.cfg)
-        self.scheduler = Scheduler(SlotAllocator(n_slots))
 
-        with use_dispatch(self._dcfg):
-            self.cache = model.init_cache(n_slots, max_len)
+        self.paged = page_size is not None
+        self.page_size = page_size
+        if prefill_chunk is not None:
+            if not self.paged:
+                raise ValueError("prefill_chunk requires page_size (paged mode)")
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
+        if self.paged:
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if model.init_cache_paged is None:
+                raise ValueError(f"{self.cfg.family} model has no paged cache builder")
+            self.max_pages = -(-max_len // page_size)
+            self.kv_pages = kv_pages if kv_pages is not None else n_slots * self.max_pages
+            with use_dispatch(self._dcfg):
+                self.cache, self._paged_mask = model.init_cache_paged(
+                    n_slots, max_len, page_size, self.kv_pages
+                )
+            self._has_pages = any(jax.tree_util.tree_leaves(self._paged_mask))
+            self._trash = self.kv_pages  # trash page id (attention.trash_page)
+            self._bt = np.full((n_slots, self.max_pages), self._trash, np.int32)
+            self._bt_dirty = True
+            self.scheduler = Scheduler(
+                SlotAllocator(n_slots),
+                pages=PageAllocator(self.kv_pages),
+                page_need=self._page_need,
+            )
+        else:
+            self.kv_pages = self.max_pages = 0
+            self._paged_mask = None
+            self._has_pages = False
+            self.scheduler = Scheduler(SlotAllocator(n_slots))
+            with use_dispatch(self._dcfg):
+                self.cache = model.init_cache(n_slots, max_len)
+        # byte accounting: paged leaves are banked per PAGE, everything else
+        # (slot-resident leaves, flat pools) is resident up front
+        paged_leaves = (
+            jax.tree_util.tree_leaves(self._paged_mask) if self.paged else []
+        )
+        cache_leaves = jax.tree_util.tree_leaves(
+            {k: v for k, v in self.cache.items() if k != "block_table"}
+        )
+        self._bytes_per_page = sum(
+            l.nbytes // l.shape[_cache_batch_axis(l)]
+            for l, m in zip(cache_leaves, paged_leaves)
+            if m
+        ) if self.paged else 0
+        self._bytes_resident = sum(l.nbytes for l in cache_leaves) - (
+            self._bytes_per_page * (self.kv_pages + 1) if self.paged else 0
+        )
+        self.kv_bytes_capacity = sum(l.nbytes for l in cache_leaves)
+        self._chunking: Dict[int, list] = {}  # slot -> [request, next_start]
+        self._chunk_jit = None
         self._prefill_jit = jax.jit(
             lambda p, b, li: model.prefill(p, b, max_len, last_index=li)
         )
@@ -228,15 +353,31 @@ class Engine:
         self.steps = 0  # device decode steps executed
         self.host_syncs = 0  # fused-block host round-trips
         self.decoded_tokens = 0  # tokens emitted by decode (excl. prefill)
+        self.peak_active = 0  # max concurrently admitted requests
+        self.peak_pages_in_use = 0  # max pages simultaneously allocated
+        self.prefill_chunks = 0  # chunked-prefill chunks executed
 
     # ------------------------------------------------------------------ #
     # submission / introspection
     # ------------------------------------------------------------------ #
+    def _page_need(self, request) -> int:
+        """Pages a request must reserve: its WHOLE footprint (prompt plus
+        max_new_tokens), taken at admission so decode can never run out of
+        pages mid-stream (no preemption machinery needed)."""
+        if not self._has_pages:
+            return 0
+        return -(-(int(request.prompt.size) + request.max_new_tokens) // self.page_size)
+
     def submit(self, request: Request) -> Request:
         if request.prompt.size + request.max_new_tokens > self.max_len:
             raise ValueError(
                 f"prompt ({request.prompt.size}) + max_new_tokens "
                 f"({request.max_new_tokens}) exceeds max_len ({self.max_len})"
+            )
+        if self.paged and self._page_need(request) > self.kv_pages:
+            raise ValueError(
+                f"request needs {self._page_need(request)} pages but the pool "
+                f"holds {self.kv_pages} — it could never be admitted"
             )
         request.uid = self._next_uid
         self._next_uid += 1
@@ -265,6 +406,39 @@ class Engine:
     def tokens_per_sync(self) -> float:
         """Decoded tokens amortized per host round-trip."""
         return self.decoded_tokens / self.host_syncs if self.host_syncs else 0.0
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.scheduler.pages.n_used if self.paged else 0
+
+    @property
+    def kv_bytes_in_use(self) -> int:
+        """ACTUAL cache bytes backing admitted work: allocated pages (plus
+        slot-resident leaves) in paged mode; in flat mode the whole pool is
+        committed up front, so in-use == capacity regardless of load.
+
+        Scope: the PERSISTENT pool only.  Both engines additionally
+        materialize a transient per-admission prefill cache (one
+        (G, max_len) micro-batch, freed after the scatter) that this metric
+        — and ``kv_bytes_peak`` — deliberately exclude; size real HBM
+        headroom as pool + one prefill micro-batch.  Chunked prefill
+        shrinks that transient for long prompts to a single (1, chunk)
+        slice."""
+        if not self.paged:
+            return self.kv_bytes_capacity
+        return self._bytes_resident + self._bytes_per_page * self.pages_in_use
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        """High-water cache bytes actually backing admitted work."""
+        if not self.paged:
+            return self.kv_bytes_capacity
+        return self._bytes_resident + self._bytes_per_page * self.peak_pages_in_use
+
+    def reset_counters(self):
+        """Zero the perf/accounting counters (benchmark warmup boundary)."""
+        self.steps = self.host_syncs = self.decoded_tokens = 0
+        self.peak_active = self.peak_pages_in_use = self.prefill_chunks = 0
 
     # ------------------------------------------------------------------ #
     # admission + prefill
@@ -319,28 +493,45 @@ class Engine:
         padded_reqs = reqs + [None] * (G - len(reqs))
         with use_dispatch(self._dcfg):
             logits, part = self._prefill_jit(self.params, batch, jnp.asarray(last_index))
-            self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
+            if self.paged:
+                # dummy rows (and each slot's unallocated table tail) scatter
+                # to the trash page; allocated pages are fully overwritten
+                bt_rows = np.full((G, self.max_pages), self._trash, np.int32)
+                bt_rows[: len(slots)] = self._bt[slots]
+                pools = {k: v for k, v in self.cache.items() if k != "block_table"}
+                merged = _scatter_mixed(
+                    pools, part, self._paged_mask, slots, self.n_slots,
+                    jnp.asarray(bt_rows), self.page_size,
+                )
+                merged["block_table"] = self.cache["block_table"]
+                self.cache = merged
+            else:
+                self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
             first = self._sample(logits, padded_reqs, [0] * G)
 
         now = time.perf_counter()
         finished = []
         for i, (slot, req) in enumerate(group):
-            self._reqs[slot] = req
-            self._pos[slot] = lens[i]
-            self._tokens[slot, 0] = first[i]
-            self._active[slot] = True
-            self._emitted[slot] = 1
-            self._max_new[slot] = req.max_new_tokens
-            self._seeds[slot] = _seed32(req.sampling.seed)
-            self._temps[slot] = req.sampling.temperature
-            self._topks[slot] = req.sampling.top_k
-            req.t_first = now
-            req.tokens.append(int(first[i]))
+            self._activate_slot(slot, req, int(lens[i]), int(first[i]), now)
         for slot, _ in group:
             done = self._maybe_finish(slot)
             if done is not None:
                 finished.append(done)
         return finished
+
+    def _activate_slot(self, slot: int, req: Request, pos: int, first_tok: int, now: float):
+        """Post-prefill bookkeeping shared by grouped and chunked prefill."""
+        self._reqs[slot] = req
+        self._pos[slot] = pos
+        self._tokens[slot, 0] = first_tok
+        self._active[slot] = True
+        self._emitted[slot] = 1
+        self._max_new[slot] = req.max_new_tokens
+        self._seeds[slot] = _seed32(req.sampling.seed)
+        self._temps[slot] = req.sampling.temperature
+        self._topks[slot] = req.sampling.top_k
+        req.t_first = now
+        req.tokens.append(first_tok)
 
     # ------------------------------------------------------------------ #
     # sampling / completion
@@ -386,8 +577,70 @@ class Engine:
             self._temps[slot] = 0.0
             self._topks[slot] = 0
             self.scheduler.release(slot)
+            if self.paged:
+                # Compact the table row back to all-trash BEFORE the next
+                # device launch: the freed pages may be re-granted to another
+                # slot, and a stale row would let this (now inactive) slot's
+                # idempotent re-writes land in pages it no longer owns.
+                self._bt[slot] = self._trash
+                self._bt_dirty = True
             return req
         return None
+
+    def _sync_block_table(self):
+        """Push host block-table edits to the device cache (pre-launch)."""
+        if self.paged and self._bt_dirty:
+            self.cache["block_table"] = jnp.asarray(self._bt)
+            self._bt_dirty = False
+
+    # ------------------------------------------------------------------ #
+    # chunked prefill (paged mode): one chunk per engine step
+    # ------------------------------------------------------------------ #
+    def _chunk_step(self) -> List[Request]:
+        """Run ONE prefill chunk for the oldest chunking request.
+
+        Chunks are a fixed (1, prefill_chunk) shape (the last chunk of a
+        prompt is right-padded; ``n_real`` masks the tail), so live traffic
+        compiles exactly one chunk program per arch.  The final chunk's
+        logits sample the request's first token and the slot joins the
+        decode batch at the next block.
+        """
+        slot = next(iter(self._chunking))  # dict preserves admission order
+        req, start, row = self._chunking[slot]
+        C = self.prefill_chunk
+        plen = int(req.prompt.size)
+        n = min(C, plen - start)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.prompt[start : start + n]
+        if self._chunk_jit is None:
+            model = self.model
+            self._chunk_jit = jax.jit(
+                lambda p, c, t, bt, st, nr: model.prefill_chunk(p, c, t, bt, st, nr),
+                donate_argnums=(1,),
+            )
+        with use_dispatch(self._dcfg):
+            logits, self.cache = self._chunk_jit(
+                self.params,
+                self.cache,
+                jnp.asarray(toks),
+                jnp.asarray(row),
+                jnp.int32(start),
+                jnp.int32(n),
+            )
+        self.prefill_chunks += 1
+        start += n
+        if start < plen:
+            self._chunking[slot][1] = start
+            return []
+        del self._chunking[slot]
+        # last chunk landed: publish the row so the decode block (and its
+        # page writes) see the slot's pages from here on
+        self._bt[slot] = row
+        self._bt_dirty = True
+        first = self._sample(logits, [req], [0])
+        self._activate_slot(slot, req, plen, int(first[0]), time.perf_counter())
+        done = self._maybe_finish(slot)
+        return [done] if done is not None else []
 
     # ------------------------------------------------------------------ #
     # the fused decode block (device-resident inner loop)
@@ -451,18 +704,57 @@ class Engine:
     # the engine step
     # ------------------------------------------------------------------ #
     def step(self) -> List[Request]:
-        """Admit waiting requests, run one fused decode block (up to
-        ``decode_block`` tokens per active slot with a single host
-        round-trip); returns the requests that finished during this step."""
+        """Admit waiting requests (paged mode: gated on free PAGES, with
+        long prompts routed to the chunked-prefill queue), run at most one
+        prefill chunk, then one fused decode block (up to ``decode_block``
+        tokens per active slot with a single host round-trip); returns the
+        requests that finished during this step."""
         finished: List[Request] = []
 
-        for group in self._admission_groups(self.scheduler.admit()):
+        placed = self.scheduler.admit()
+        if self.paged and placed:
+            self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        if placed:
+            self.peak_active = max(self.peak_active, self.scheduler.allocator.n_active)
+
+        chunking = (
+            self.paged
+            and self.prefill_chunk is not None
+            and self.model.prefill_chunk is not None
+        )
+        direct = []
+        for slot, req in placed:
+            row = None
+            if self.paged:
+                pages = self.scheduler.slot_pages[slot]
+                row = np.full((self.max_pages,), self._trash, np.int32)
+                row[: len(pages)] = pages
+            if chunking and req.prompt.size > self.prefill_chunk:
+                # The slot's DEVICE table row stays on trash until the last
+                # chunk lands: the fused block's frozen-slot re-feeds write
+                # through the table at position 0, and a published row would
+                # let them corrupt the half-prefilled pages.  The chunk
+                # program gets the real row as an explicit argument instead.
+                self._chunking[slot] = [req, 0, row]
+            else:
+                if row is not None:
+                    self._bt[slot] = row
+                    self._bt_dirty = True
+                direct.append((slot, req))
+
+        for group in self._admission_groups(direct):
             if group:
                 # requests whose single token came from prefill finish here
                 finished.extend(self._prefill_group(group))
 
+        if self._chunking:
+            # ONE chunk per step: long-prompt prefill is interleaved with
+            # the decode block below instead of stalling it wholesale
+            finished.extend(self._chunk_step())
+
         if not self._active.any():
             return finished
+        self._sync_block_table()
 
         greedy = not (self._temps[self._active] > 0).any()
         fused = self._fused_fn(greedy)

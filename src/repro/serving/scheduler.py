@@ -1,10 +1,20 @@
-"""Slot allocation + request scheduling for the continuous-batching engine.
+"""Slot + page allocation and request scheduling for the serving engine.
 
 The engine owns a fixed pool of ``n_slots`` cache slots (rows of the batched
 decode cache).  Requests queue FIFO; whenever a slot frees up, the scheduler
 admits the oldest waiting request.  Slot exhaustion therefore QUEUES work —
 it never errors — and freed slots are recycled immediately, which is what
 keeps the decode batch full under sustained traffic.
+
+Paged mode adds a :class:`PageAllocator` over the engine's physical KV page
+pool: admission is then gated on PAGES, not slots — a request is admitted
+only when its actual need (``ceil((prompt + max_new) / page_size)`` pages,
+reserved up front so decode can never strand mid-stream) fits the free
+list, so total admitted concurrency tracks real footprints instead of
+``n_slots`` worst-case reservations.  Page exhaustion queues exactly like
+slot exhaustion; admission stays strictly FIFO (a large request at the head
+waits rather than being bypassed — deterministic traces over throughput
+tricks).
 
 Pure host-side bookkeeping: no jax imports, trivially unit-testable
 (tests/test_scheduler.py).
@@ -13,9 +23,9 @@ Pure host-side bookkeeping: no jax imports, trivially unit-testable
 from __future__ import annotations
 
 import collections
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
-__all__ = ["SlotAllocator", "Scheduler"]
+__all__ = ["SlotAllocator", "PageAllocator", "Scheduler"]
 
 
 class SlotAllocator:
@@ -61,15 +71,96 @@ class SlotAllocator:
         self._free.sort(reverse=True)
 
 
+class PageAllocator:
+    """Free-list allocator over ``n_pages`` fixed-size KV-cache pages.
+
+    ``alloc(n)`` is ALL-OR-NOTHING: it returns the ``n`` lowest free page
+    ids (deterministic reuse order, mirroring :class:`SlotAllocator`) or
+    None — never a partial grant, so a request can never be admitted into a
+    half-backed cache.  Pages are unit-sized, so the pool cannot fragment:
+    any ``n <= n_free`` request succeeds, and ``free`` reclaims a slot's
+    whole page set at once.  ``extend`` grows an existing allocation with
+    the same all-or-nothing contract.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 0:
+            raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, -1, -1))  # stack, lowest id on top
+        self._owned = [False] * n_pages
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owned[p] = True
+        return pages
+
+    def extend(self, pages: List[int], n: int) -> Optional[List[int]]:
+        """Grow an allocation in place by ``n`` pages (all-or-nothing).
+
+        The engine's current admission policy reserves a request's whole
+        footprint up front (no mid-stream growth, hence no preemption), so
+        today only tests exercise this; it is the hook an incremental
+        reservation policy (grow per decode block, preempt on failure)
+        would build on.
+        """
+        more = self.alloc(n)
+        if more is None:
+            return None
+        pages.extend(more)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (0 <= p < self.n_pages):
+                raise ValueError(f"page {p} out of range [0, {self.n_pages})")
+            if not self._owned[p]:
+                raise ValueError(f"double free of page {p}")
+        for p in pages:
+            self._owned[p] = False
+            self._free.append(p)
+        self._free.sort(reverse=True)  # deterministic reuse order
+
+
 class Scheduler:
     """FIFO admission control on top of a :class:`SlotAllocator`.
 
     ``enqueue`` never blocks; ``admit`` drains the queue into free slots and
     returns the (slot, request) placements made this round.
+
+    With ``pages``/``page_need`` (paged engine), admission additionally
+    reserves each request's page set up front — both resources or neither —
+    and ``release`` returns pages with the slot.  ``slot_pages[slot]`` holds
+    the admitted request's page ids (the engine writes them into its block
+    table).
     """
 
-    def __init__(self, allocator: SlotAllocator):
+    def __init__(
+        self,
+        allocator: SlotAllocator,
+        *,
+        pages: Optional[PageAllocator] = None,
+        page_need: Optional[Callable[[object], int]] = None,
+    ):
+        if (pages is None) != (page_need is None):
+            raise ValueError("pages and page_need come together")
         self.allocator = allocator
+        self.pages = pages
+        self.page_need = page_need
+        self.slot_pages: dict = {}
         self.queue: Deque = collections.deque()
 
     @property
@@ -82,9 +173,18 @@ class Scheduler:
     def admit(self) -> List[Tuple[int, object]]:
         placed = []
         while self.queue and self.allocator.n_free:
-            slot = self.allocator.alloc()
+            if self.pages is not None:
+                pg = self.pages.alloc(self.page_need(self.queue[0]))
+                if pg is None:  # page exhaustion queues; strict FIFO
+                    break
+                slot = self.allocator.alloc()
+                self.slot_pages[slot] = pg
+            else:
+                slot = self.allocator.alloc()
             placed.append((slot, self.queue.popleft()))
         return placed
 
     def release(self, slot: int) -> None:
+        if self.pages is not None:
+            self.pages.free(self.slot_pages.pop(slot))
         self.allocator.free(slot)

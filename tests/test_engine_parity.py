@@ -74,6 +74,115 @@ def test_engine_greedy_parity(arch_id):
     assert r1.tokens == refs[1], f"staggered parity broken for {arch_id} (r1)"
 
 
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_paged_engine_greedy_parity(arch_id):
+    """PAGED pool + chunked prefill: still bit-identical to greedy_generate,
+    for every arch, at two page sizes x two prefill-chunk sizes — including
+    chunk boundaries not aligned to the prompt length (prompts 6 and 4 vs
+    chunks 3 and 5: 6 = 3+3 aligned, 6 = 5+1 ragged; the 4-prompt rides the
+    monolithic path under chunk 5, covering the fallback).  Staggered
+    admission exercises page allocation against a half-occupied pool."""
+    cfg = get_arch(arch_id, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32),
+        rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+    ]
+    extras = [modality_extras(cfg, rng), modality_extras(cfg, rng)]
+    steps = [5, 6]
+    refs = [
+        _reference(model, params, p, e, s)
+        for p, e, s in zip(prompts, extras, steps)
+    ]
+    for page_size, chunk in ((4, 3), (8, 5)):
+        eng = Engine(
+            model, params, n_slots=2, max_len=MAX_LEN,
+            page_size=page_size, prefill_chunk=chunk,
+        )
+        r0 = eng.submit(
+            Request(prompt=prompts[0], max_new_tokens=steps[0], extras=extras[0])
+        )
+        eng.step()
+        eng.step()  # r0 mid-decode (or mid-chunk) when r1 arrives
+        r1 = eng.submit(
+            Request(prompt=prompts[1], max_new_tokens=steps[1], extras=extras[1])
+        )
+        while eng.has_work:
+            eng.step()
+        assert r0.tokens == refs[0], (
+            f"paged parity broken for {arch_id} (page={page_size}, chunk={chunk}, r0)"
+        )
+        assert r1.tokens == refs[1], (
+            f"paged parity broken for {arch_id} (page={page_size}, chunk={chunk}, r1)"
+        )
+
+
+def test_paged_engine_parity_under_page_pressure():
+    """3 requests against a pool that cannot hold them all at once: page
+    exhaustion queues, pages recycle mid-trace, chunked prefill interleaves
+    with running decodes — and every request still matches its solo
+    reference exactly, at an unaligned chunk size."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32) for n in (9, 7, 4)
+    ]
+    steps = [3, 6, 6]
+    refs = [
+        _reference(model, params, p, {}, s) for p, s in zip(prompts, steps)
+    ]
+    # needs: ceil(12/4)=3, ceil(13/4)=4, ceil(10/4)=3 pages; 7 pages < 10
+    eng = Engine(
+        model, params, n_slots=3, max_len=MAX_LEN,
+        page_size=4, kv_pages=7, prefill_chunk=5, decode_block=3,
+    )
+    reqs = [
+        eng.submit(Request(prompt=p, max_new_tokens=s))
+        for p, s in zip(prompts, steps)
+    ]
+    eng.step()
+    assert eng.n_waiting >= 1  # the pool can't hold all three at once
+    while eng.has_work:
+        eng.step()
+    assert eng.prefill_chunks >= 2  # the 9- and 7-token prompts chunked
+    for i, (req, ref) in enumerate(zip(reqs, refs)):
+        assert req.tokens == ref, f"request {i} diverged under page pressure"
+    assert eng.pages_in_use == 0
+
+
+def test_paged_engine_chunk_and_block_sizes_agree():
+    """Page size, prefill chunk, and decode block are PURE layout/cadence
+    knobs: emitted tokens are identical across all combinations."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32) for n in (11, 6)
+    ]
+    steps = [5, 4]
+    outs = {}
+    for key, kwargs in {
+        "flat": dict(),
+        "p4c3b1": dict(page_size=4, prefill_chunk=3, decode_block=1),
+        "p4c4b8": dict(page_size=4, prefill_chunk=4, decode_block=8),
+        "p8c5b3": dict(page_size=8, prefill_chunk=5, decode_block=3),
+    }.items():
+        eng = Engine(model, params, n_slots=2, max_len=MAX_LEN, **kwargs)
+        reqs = [
+            eng.submit(Request(prompt=p, max_new_tokens=s))
+            for p, s in zip(prompts, steps)
+        ]
+        while eng.has_work:
+            eng.step()
+        outs[key] = [r.tokens for r in reqs]
+    assert outs["flat"] == outs["p4c3b1"] == outs["p4c4b8"] == outs["p8c5b3"]
+
+
 @pytest.mark.parametrize("decode_block", [1, 8])
 def test_engine_parity_under_slot_churn(decode_block):
     """3 requests on 2 slots: the queued request is admitted into a REUSED

@@ -1,12 +1,13 @@
-"""Unit tests for the serving slot allocator / scheduler, plus engine-level
-slot-lifecycle properties (exhaustion queues, reuse, no cache leakage)."""
+"""Unit tests for the serving slot/page allocators and scheduler, plus
+engine-level lifecycle properties (exhaustion queues, reuse, no cache
+leakage) for both the flat and the paged KV pool."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.scheduler import Scheduler, SlotAllocator
+from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
 
 
 # --------------------------------------------------------------------------- #
@@ -63,6 +64,64 @@ def test_scheduler_fifo_admission_and_queueing():
     sched.release(0)
     assert sched.admit() == [(0, "d")]
     assert sched.n_waiting == 0
+
+
+# --------------------------------------------------------------------------- #
+# PageAllocator
+# --------------------------------------------------------------------------- #
+def test_page_allocator_all_or_nothing_and_exhaustion():
+    a = PageAllocator(4)
+    assert a.alloc(3) == [0, 1, 2]
+    assert a.alloc(2) is None  # never a partial grant
+    assert a.n_free == 1  # ... and the failed alloc took nothing
+    assert a.alloc(1) == [3]
+    assert a.alloc(1) is None and a.n_used == 4
+    assert a.alloc(0) == []  # zero-page requests always fit (ssm/swa archs)
+
+
+def test_page_allocator_free_reclaims_whole_set_lowest_first():
+    a = PageAllocator(6)
+    first = a.alloc(3)
+    second = a.alloc(2)
+    a.free(first)  # the whole set comes back at once — no fragmentation
+    assert a.n_free == 4
+    assert a.alloc(4) == [0, 1, 2, 5]  # deterministic lowest-first reuse
+    a.free(second + [0, 1, 2, 5])
+    assert a.n_free == 6
+
+
+def test_page_allocator_extend_and_double_free():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    assert a.extend(pages, 1) == [0, 1, 2] and pages == [0, 1, 2]
+    assert a.extend(pages, 2) is None and pages == [0, 1, 2]  # all-or-nothing
+    a.free(pages)
+    with pytest.raises(ValueError):
+        a.free([0])  # double free
+    with pytest.raises(ValueError):
+        a.free([99])  # out of range
+
+
+def test_scheduler_page_gated_admission_queues_fifo():
+    """Admission is gated on PAGES: a big head-of-queue request waits (strict
+    FIFO — never bypassed by a smaller one behind it), and its pages+slot are
+    reserved together or not at all."""
+    need = {"big": 3, "small": 1}
+    sched = Scheduler(
+        SlotAllocator(4), pages=PageAllocator(4), page_need=lambda r: need[r]
+    )
+    sched.enqueue("small")
+    sched.enqueue("big")
+    sched.enqueue("small")
+    placed = sched.admit()
+    # small (1 page) + big (3 pages) fill the pool; the second small queues
+    assert [r for _, r in placed] == ["small", "big"]
+    assert sched.n_waiting == 1 and sched.pages.n_free == 0
+    assert sched.admit() == []  # page exhaustion queues rather than crashes
+    sched.release(1)  # big finishes -> its WHOLE page set is reclaimed
+    assert sched.pages.n_free == 3
+    assert [r for _, r in sched.admit()] == ["small"]
+    assert sched.slot_pages[1] == [1]  # lowest freed page, recycled
 
 
 # --------------------------------------------------------------------------- #
@@ -141,3 +200,121 @@ def test_engine_rejects_oversized_request(small_model):
     eng = Engine(model, params, n_slots=1, max_len=8)
     with pytest.raises(ValueError):
         eng.submit(Request(prompt=np.arange(6, dtype=np.int32), max_new_tokens=4))
+
+
+# --------------------------------------------------------------------------- #
+# Engine-level PAGED pool lifecycle
+# --------------------------------------------------------------------------- #
+def test_paged_engine_page_exhaustion_queues_and_drains(small_model):
+    """Slots outnumber the page budget: admission is page-gated, the overflow
+    request queues (never crashes, never drops), and every request still
+    completes once pages recycle."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+    # each request needs ceil((4 + 3) / 4) = 2 pages; 3 pages admit ONE
+    # request at a time even though two slots are free
+    eng = Engine(model, params, n_slots=2, max_len=16, page_size=4, kv_pages=3,
+                 decode_block=1)
+    reqs = [
+        eng.submit(
+            Request(
+                prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+                max_new_tokens=3,
+            )
+        )
+        for _ in range(3)
+    ]
+    eng.step()
+    assert eng.n_active == 1 and eng.n_waiting == 2  # page-gated, not slot-gated
+    assert eng.pages_in_use == 2
+    while eng.has_work:
+        eng.step()
+    assert all(len(r.tokens) == 3 for r in reqs)
+    assert eng.pages_in_use == 0 and eng.scheduler.pages.n_free == 3
+    assert eng.peak_active == 1
+
+
+def test_paged_engine_oversized_for_pool_rejected(small_model):
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    eng = Engine(model, params, n_slots=1, max_len=16, page_size=4, kv_pages=2)
+    with pytest.raises(ValueError):  # needs 3 pages, pool holds 2: livelock guard
+        eng.submit(Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=4))
+
+
+def test_paged_engine_no_leakage_through_recycled_pages(small_model):
+    """A request admitted into RECYCLED pages (and a recycled slot) must match
+    its fresh-engine run exactly: prefill fully overwrites every allocated
+    page and the freed slot's block-table row is compacted back to trash."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(3)
+    pa = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+
+    fresh = Engine(model, params, n_slots=1, max_len=16, page_size=4)
+    solo = fresh.submit(Request(prompt=pb, max_new_tokens=6))
+    while fresh.has_work:
+        fresh.step()
+
+    eng = Engine(model, params, n_slots=1, max_len=16, page_size=4)
+    first = eng.submit(Request(prompt=pa, max_new_tokens=7))
+    reused = eng.submit(Request(prompt=pb, max_new_tokens=6))
+    while eng.has_work:
+        eng.step()
+    assert len(first.tokens) == 7
+    assert reused.tokens == solo.tokens
+
+
+def test_paged_engine_block_table_compaction_on_reuse(small_model):
+    """The block-table row of a freed slot is all-trash until reuse, and the
+    reused slot's fresh pages are written DENSELY from entry 0."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    eng = Engine(model, params, n_slots=1, max_len=16, page_size=4, decode_block=1)
+    trash = eng.kv_pages
+    assert (eng._bt == trash).all()  # pristine table points at trash
+    r = eng.submit(Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=4))
+    eng.step()  # prefill + 1 decode: still mid-stream (decode_block=1)
+    need = eng._page_need(r)  # ceil(9/4) = 3
+    row = eng._bt[0]
+    assert (row[:need] != trash).all() and (row[need:] == trash).all()
+    while eng.has_work:
+        eng.step()
+    assert (eng._bt == trash).all()  # compacted back on release
+    r2 = eng.submit(Request(prompt=np.arange(10, dtype=np.int32), max_new_tokens=6))
+    eng.step()
+    need2 = eng._page_need(r2)  # ceil(16/4) = 4
+    row = eng._bt[0]
+    assert (row[:need2] != trash).all() and (row[need2:] == trash).all()
+    while eng.has_work:
+        eng.step()
+
+
+def test_paged_engine_memory_accounting(small_model):
+    """kv_bytes_in_use tracks ALLOCATED pages, not worst-case capacity, and a
+    leaner page pool really shrinks the device footprint at equal max_len."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    full = Engine(model, params, n_slots=2, max_len=16)
+    paged = Engine(model, params, n_slots=2, max_len=16, page_size=4, kv_pages=4,
+                   decode_block=1)
+    # flat pool: committed up front, in_use == capacity always
+    assert full.kv_bytes_in_use == full.kv_bytes_capacity > 0
+    # half the token capacity (4 * 4 vs 2 * 16) + one trash page
+    assert paged.kv_bytes_capacity < full.kv_bytes_capacity
+    assert paged.kv_bytes_in_use == 0
+    r = paged.submit(Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=3))
+    paged.step()
+    assert paged.pages_in_use == 2  # ceil((5 + 3) / 4)
+    assert paged.kv_bytes_in_use == 2 * paged._bytes_per_page
+    while paged.has_work:
+        paged.step()
+    assert paged.kv_bytes_in_use == 0 and paged.peak_pages_in_use == 2
+    assert len(r.tokens) == 3
