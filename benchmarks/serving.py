@@ -28,6 +28,14 @@ pool, then a paged pool backing twice the slots — and gates the paged row
 against the flat one in the same run (more admitted concurrency, no
 throughput loss, bounded short-request TTFT).
 
+``--shared-prefix`` replays a common-system-prompt trace (every request =
+``--sys-prompt-len`` shared tokens + a random suffix) TWICE on the paged
+engine at equal KV bytes — prefix sharing off, then on (``+shared`` row)
+— and gates the same-run contract: strictly fewer peak pages (shared
+prefix pages counted once), strictly more peak-admitted concurrency
+(page-gated admission banks the savings), throughput within tolerance,
+and bit-identical greedy tokens per request.
+
 ``--json BENCH_serving.json`` additionally writes the trace rows as a JSON
 result document, and ``--check-baseline benchmarks/baselines/
 BENCH_serving.json --tolerance 0.5`` compares tok/s and utilization against
@@ -188,6 +196,8 @@ def run_trace(
     long_frac: float = 0.0,
     long_prompt_range=(48, 64),
     max_len: int = 0,
+    share_prefix: bool = False,
+    sys_prompt_len: int = 0,
     row_suffix: str = "",
 ):
     """Replay a Poisson arrival trace through the continuous engine.
@@ -210,11 +220,22 @@ def run_trace(
     trace): the row then also reports TTFT p95 over the SHORT requests
     alone — the queue-behind-a-long-prefill number chunked prefill bounds.
 
+    ``sys_prompt_len`` > 0 prepends the SAME ``sys_prompt_len`` random
+    tokens to every prompt (the system-prompt traffic pattern);
+    ``share_prefix`` turns on the engine's refcounted copy-on-write
+    prefix sharing over that trace.  Rows then also report
+    ``shared_hits`` (pages mapped read-only instead of re-allocated) and
+    ``cow_forks``, and greedy rows stash per-request tokens for the
+    same-run parity gate (:func:`check_shared_rows`).
+
     ``warmup`` (default on) replays throwaway requests through the SAME
     engine before the clock starts, so the row measures steady-state
     serving throughput rather than jit compile time (which on the reduced
     CPU configs is seconds — an order of magnitude more than the decode
-    work itself, and identical across engine designs).
+    work itself, and identical across engine designs).  The prefix cache
+    is cleared between warmup sub-runs (so every prefill bucket actually
+    compiles instead of being skipped by a warm match) and once more at
+    the warmup boundary, so the timed run starts cold and deterministic.
     """
     from repro.data.synthetic import modality_extras
     from repro.serving import Engine, Request, SamplingParams
@@ -232,16 +253,26 @@ def run_trace(
         rng = np.random.default_rng(seed)
         arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests)).tolist()
         top_prompt = max(prompt_range[1], long_prompt_range[1] if long_frac > 0 else 0)
-        eff_max_len = max_len or (top_prompt + gen_range[1])
+        eff_max_len = max_len or (sys_prompt_len + top_prompt + gen_range[1])
+        # the shared system prompt is drawn ONCE (same seed path whether
+        # sharing is on or off, so paired rows replay identical traffic)
+        sys_tokens = (
+            rng.integers(0, cfg.vocab, size=(sys_prompt_len,)).astype(np.int32)
+            if sys_prompt_len
+            else None
+        )
         reqs, is_long = [], []
         for i in range(n_requests):
             sp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed + i)
             long = long_frac > 0 and rng.random() < long_frac
             rng_range = long_prompt_range if long else prompt_range
             is_long.append(long)
+            tail = rng.integers(
+                0, cfg.vocab, size=(int(rng.integers(*rng_range)),)
+            ).astype(np.int32)
             reqs.append(
                 Request(
-                    prompt=rng.integers(0, cfg.vocab, size=(int(rng.integers(*rng_range)),)),
+                    prompt=tail if sys_tokens is None else np.concatenate([sys_tokens, tail]),
                     max_new_tokens=int(rng.integers(*gen_range)),
                     sampling=sp,
                     extras=modality_extras(cfg, rng),
@@ -253,6 +284,7 @@ def run_trace(
             page_size=page_size or None,
             kv_pages=kv_pages or None,
             prefill_chunk=prefill_chunk or None,
+            share_prefix=share_prefix,
         )
         if warmup:
             # Compile OUTSIDE the clock.  Admission buckets micro-batch
@@ -290,6 +322,9 @@ def run_trace(
             gs.append(n_slots)
             for g in gs:
                 for n in lens:
+                    # cleared per sub-run: a warm prefix match would SKIP
+                    # the grouped prefill this bucket exists to compile
+                    eng.reset_prefix_cache()
                     eng.run(
                         [
                             Request(
@@ -302,6 +337,7 @@ def run_trace(
                         ]
                     )
             if chunk_lens:  # one ragged-tail chunked prompt compiles the rest
+                eng.reset_prefix_cache()
                 eng.run(
                     [
                         Request(
@@ -312,6 +348,36 @@ def run_trace(
                         )
                     ]
                 )
+            if share_prefix and sys_prompt_len and eng._share:
+                # mid-prompt prefill shapes: a donor/follower pair compiles
+                # the shared-tail chunk program, and an exact-page-boundary
+                # pair (identical prompts, length a page multiple) compiles
+                # the COW fork copy — both are runtime-steered after that
+                eng.reset_prefix_cache()
+                wsys = wrng.integers(0, cfg.vocab, size=(sys_prompt_len,)).astype(np.int32)
+
+                def sysreq(extra: int):
+                    tail = wrng.integers(0, cfg.vocab, size=(extra,)).astype(np.int32)
+                    return Request(
+                        prompt=np.concatenate([wsys, tail]),
+                        max_new_tokens=2,
+                        sampling=wsp,
+                        extras=modality_extras(cfg, wrng),
+                    )
+
+                eng.run([sysreq(2)])
+                eng.run([sysreq(3)])  # matches -> shared-tail chunk program
+                page = eng.page_size
+                blen = -(-(sys_prompt_len + 1) // page) * page
+                bprompt = wrng.integers(0, cfg.vocab, size=(blen,)).astype(np.int32)
+                for _ in range(2):  # second run fully matches -> COW program
+                    eng.run(
+                        [Request(prompt=bprompt.copy(), max_new_tokens=2,
+                                 sampling=wsp, extras=modality_extras(cfg, wrng))]
+                    )
+            # timed run starts with a COLD prefix cache either way: the
+            # sharing row's wins come from the trace itself, not warmup
+            eng.reset_prefix_cache()
             eng.reset_counters()
         t0 = time.perf_counter()
         done = eng.run(reqs, arrivals=arrivals)
@@ -341,9 +407,20 @@ def run_trace(
             kv_bytes_peak=eng.kv_bytes_peak,
             pages_peak=eng.peak_pages_in_use,
             prefill_chunks=eng.prefill_chunks,
+            shared_hits=eng.shared_page_hits,
+            cow_forks=eng.cow_forks,
+            # whether sharing was EFFECTIVE for this arch (paged leaves +
+            # a mid-prompt prefill entry) — the gate skips inert archs
+            # (mamba/SWA/vlm/audio) instead of failing their zero hits
+            share_supported=int(getattr(eng, "_share", False)),
         )
         if short_ttfts:
             row["ttft_p95_short_ms"] = percentile(short_ttfts, 0.95) * 1e3
+        if temperature == 0.0:
+            # per-request emitted tokens, in submission order: the same-run
+            # shared-vs-unshared parity gate (underscore keys never reach
+            # the CSV/JSON outputs)
+            row["_tokens"] = [list(r.tokens) for r in reqs]
         rows.append(row)
     return rows
 
@@ -354,7 +431,7 @@ def write_json(rows, json_path, *, config=None):
         "tok_s", "p50_ms", "p95_ms", "ttft_ms", "ttft_p95_short_ms",
         "n_requests", "decode_steps", "host_syncs", "tok_per_sync", "util",
         "peak_active", "kv_bytes_cap", "kv_bytes_peak", "pages_peak",
-        "prefill_chunks",
+        "prefill_chunks", "shared_hits", "cow_forks", "share_supported",
     )
     doc = {
         "kind": "poisson_trace",
@@ -461,6 +538,66 @@ def check_paged_rows(rows, *, tolerance: float = 0.3) -> int:
     return failures
 
 
+def check_shared_rows(rows, *, tolerance: float = 0.3) -> int:
+    """Same-run unshared-vs-shared gates (the --shared-prefix contract).
+
+    Both rows replay the IDENTICAL system-prompt trace through the paged
+    engine at equal KV bytes, pairing ``X`` with ``X+shared``.  Two gates
+    are deterministic counts and get NO slack: the sharing engine must
+    peak strictly FEWER pages (a prefix page backing many slots occupies
+    one page of HBM) and strictly MORE admitted concurrency (page-gated
+    admission banks exactly those savings); it must also actually have
+    shared something (hit counter), hold throughput within ``tolerance``
+    (a timing number — same machine, but half-trace noise is real), and —
+    for greedy traces — emit bit-identical tokens per request (sharing
+    relocates bytes, never changes what is attended).  Returns #violations.
+
+    The strict peak gates presuppose the trace actually SATURATES the
+    page pool (arrivals far faster than service, as the CI config's burst
+    rate guarantees): a trickle that never queues on pages peaks both
+    rows identically and gates nothing.
+    """
+    by_arch = {r["arch"]: r for r in rows if "arch" in r}
+    failures = 0
+    for arch, shared in by_arch.items():
+        if not arch.endswith("+shared"):
+            continue
+        base = by_arch.get(arch[: -len("+shared")])
+        if base is None:
+            continue
+        if not shared.get("share_supported"):
+            # sharing is documented-inert for this family (no paged
+            # leaves or no mid-prompt prefill): identical rows are the
+            # CORRECT outcome, not a regression
+            print(
+                f"[perf-smoke] {arch[: -len('+shared')]} shared-vs-unshared: "
+                f"sharing inert for this arch, gates skipped"
+            )
+            continue
+        checks = [
+            ("pages_peak", shared["pages_peak"] < base["pages_peak"],
+             f"{shared['pages_peak']} < {base['pages_peak']}"),
+            ("peak_active", shared["peak_active"] > base["peak_active"],
+             f"{shared['peak_active']} > {base['peak_active']}"),
+            ("shared_hits", shared["shared_hits"] > 0,
+             f"{shared['shared_hits']} > 0"),
+            ("tok_s", shared["tok_s"] >= base["tok_s"] * (1.0 - tolerance),
+             f"{shared['tok_s']:.1f} >= {base['tok_s']:.1f} - {tolerance:.0%}"),
+        ]
+        if base.get("_tokens") is not None and shared.get("_tokens") is not None:
+            checks.append(
+                ("greedy_parity", shared["_tokens"] == base["_tokens"],
+                 "bit-identical tokens per request")
+            )
+        for metric, ok, detail in checks:
+            print(
+                f"[perf-smoke] {arch[: -len('+shared')]} shared-vs-unshared "
+                f"{metric}: {detail} {'OK' if ok else 'VIOLATION'}"
+            )
+            failures += 0 if ok else 1
+    return failures
+
+
 def emit_csv(rows, csv_path=None):
     lines = []
     for r in rows:
@@ -479,7 +616,9 @@ def emit_csv(rows, csv_path=None):
                 f"kv_bytes_peak={r['kv_bytes_peak']};"
                 f"kv_bytes_cap={r['kv_bytes_cap']};"
                 f"pages_peak={r['pages_peak']};"
-                f"prefill_chunks={r['prefill_chunks']}"
+                f"prefill_chunks={r['prefill_chunks']};"
+                f"shared_hits={r['shared_hits']};"
+                f"cow_forks={r['cow_forks']}"
                 f"{extra}"
             )
         else:
@@ -536,6 +675,16 @@ if __name__ == "__main__":
                     "(long-prompt mixed trace)")
     ap.add_argument("--long-prompt-range", default="48,64",
                     help="min,max long-prompt tokens when --long-frac > 0")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="replay a common-system-prompt trace TWICE on the "
+                    "paged engine at equal KV bytes — prefix sharing off, "
+                    "then on (+shared row) — and report the same-run "
+                    "contract (strictly fewer peak pages, strictly more "
+                    "admitted concurrency, no throughput loss, "
+                    "bit-identical greedy tokens)")
+    ap.add_argument("--sys-prompt-len", type=int, default=12,
+                    help="common system-prompt tokens for --shared-prefix "
+                    "(keep >= 2 pages so full-page matching engages)")
     ap.add_argument("--compare-paged", action="store_true",
                     help="run each arch TWICE at equal KV bytes: the flat "
                     "slot pool, then a paged pool (+paged row) with twice "
@@ -579,7 +728,38 @@ if __name__ == "__main__":
         # block so a checked-in baseline documents the run that produced it
         eff = dict(page_size=args.page_size, kv_pages=args.kv_pages,
                    prefill_chunk=args.prefill_chunk)
-        if args.compare_paged:
+        if args.compare_paged and args.shared_prefix:
+            raise SystemExit(
+                "--compare-paged and --shared-prefix are separate "
+                "comparisons; run them as two invocations"
+            )
+        if args.shared_prefix:
+            # identical paged geometry for both rows (EQUAL KV bytes, same
+            # slots, same trace): the only difference is share_prefix.  The
+            # default pool is sized to BIND — half the worst-case footprint
+            # — so page-gated admission, not slot count, is what the banked
+            # prefix pages relax.
+            page = args.page_size or 4
+            top = max(common["prompt_range"][1],
+                      common["long_prompt_range"][1] if args.long_frac > 0 else 0)
+            max_len = args.sys_prompt_len + top + common["gen_range"][1]
+            max_pages = -(-max_len // page)
+            eff = dict(page_size=page,
+                       kv_pages=args.kv_pages or args.n_slots * max_pages // 2,
+                       prefill_chunk=args.prefill_chunk,
+                       sys_prompt_len=args.sys_prompt_len, share_prefix=True)
+            base_kw = dict(
+                n_slots=args.n_slots, max_len=max_len, page_size=page,
+                kv_pages=eff["kv_pages"], prefill_chunk=args.prefill_chunk,
+                sys_prompt_len=args.sys_prompt_len, **common,
+            )
+            # "+sys" keeps these rows distinct from the --compare-paged rows
+            # in a merged baseline file; the pairing rule is X vs X+shared
+            rows = run_trace(arch_list, row_suffix="+sys", **base_kw)
+            rows += run_trace(
+                arch_list, share_prefix=True, row_suffix="+sys+shared", **base_kw
+            )
+        elif args.compare_paged:
             # equal KV bytes: the paged pool holds exactly the flat pool's
             # token capacity (n_slots * max_len worth of pages) but backs
             # TWICE the decode slots — admission is page-gated, so the
@@ -645,3 +825,10 @@ if __name__ == "__main__":
             n_bad += check_paged_rows(rows, tolerance=args.tolerance / 2)
         if n_bad:
             sys.exit(f"[perf-smoke] {n_bad} metric(s) regressed beyond tolerance")
+    if args.trace == "poisson" and args.shared_prefix:
+        # the shared-vs-unshared contract is gated UNCONDITIONALLY: both
+        # rows ran back-to-back on this machine, so the comparison is
+        # meaningful even where absolute cross-machine floors are not
+        n_bad = check_shared_rows(rows, tolerance=args.tolerance / 2)
+        if n_bad:
+            sys.exit(f"[perf-smoke] {n_bad} shared-prefix gate(s) violated")

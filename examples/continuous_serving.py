@@ -16,7 +16,13 @@ What it shows:
   * with ``--paged``: the PAGED KV pool — fixed-size pages + per-slot block
     tables at HALF the flat pool's capacity, admission gated on actual page
     need, one long prompt prefilled in chunks interleaved with the running
-    decodes — same tokens, fewer resident bytes.
+    decodes — same tokens, fewer resident bytes;
+  * with ``--shared``: system-prompt traffic over the paged pool with
+    refcounted copy-on-write PREFIX SHARING — every request repeats the
+    same leading prompt pages, which are prefilled once, mapped read-only
+    into each follower's block table (counted once in the page
+    accounting), and recycled only after their last reader finishes —
+    same tokens again, and strictly fewer pages than the unshared run.
 """
 
 import argparse
@@ -43,7 +49,12 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="serve from a paged KV pool at half the flat "
                     "capacity, with one long prompt chunk-prefilled")
+    ap.add_argument("--shared", action="store_true",
+                    help="system-prompt traffic over the paged pool with "
+                    "copy-on-write prefix sharing (implies --paged)")
     args = ap.parse_args()
+    if args.shared:
+        args.paged = True
 
     cfg = get_arch("llama3.2-1b", reduced=True)
     model = build_model(cfg)
@@ -58,7 +69,10 @@ def main():
         print(f"[compress] {rep.summary()}")
 
     rng = np.random.default_rng(args.seed)
-    max_len = 48
+    max_len = 64 if args.shared else 48  # room for the 16-token system prompt
+    # --shared: every request opens with the same 16-token system prompt
+    # (two full 8-token pages) followed by its own suffix
+    sys_prompt = rng.integers(0, cfg.vocab, size=(16,)) if args.shared else None
     reqs = []
     for i in range(args.n_requests):
         # mixed workload: even requests greedy, odd requests sampled
@@ -67,9 +81,12 @@ def main():
             if i % 2 == 0
             else SamplingParams(temperature=0.8, top_k=40, seed=100 + i)
         )
+        prompt = rng.integers(0, cfg.vocab, size=(int(rng.integers(4, 17)),))
+        if sys_prompt is not None:
+            prompt = np.concatenate([sys_prompt, prompt])
         reqs.append(
             Request(
-                prompt=rng.integers(0, cfg.vocab, size=(int(rng.integers(4, 17)),)),
+                prompt=prompt,
                 max_new_tokens=int(rng.integers(6, 20)),
                 sampling=sp,
             )
@@ -81,7 +98,8 @@ def main():
         # longer than 12 tokens prefilled in chunks between decode blocks
         paged_kw = dict(page_size=8,
                         kv_pages=args.n_slots * max_len // (2 * 8),
-                        prefill_chunk=12)
+                        prefill_chunk=12,
+                        share_prefix=args.shared)
         reqs.append(Request(  # a long prompt that chunk-prefills
             prompt=rng.integers(0, cfg.vocab, size=(30,)), max_new_tokens=8,
         ))
@@ -101,6 +119,13 @@ def main():
             f"({eng.kv_bytes_capacity} B pool, peak {eng.peak_pages_in_use} "
             f"pages / {eng.kv_bytes_peak} B resident, "
             f"{eng.prefill_chunks} prefill chunks interleaved)"
+        )
+    if args.shared:
+        print(
+            f"[shared] {eng.shared_page_hits} prefix pages mapped read-only "
+            f"across {eng.shared_admissions} admissions "
+            f"({eng.cow_forks} copy-on-write forks) — the system prompt's "
+            f"pages were prefilled once and counted once"
         )
     for r in sorted(done, key=lambda r: r.uid):
         kind = "greedy" if r.sampling.temperature == 0 else (

@@ -5,7 +5,7 @@ checkpoint.
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
         --batch 4 --prompt-len 16 --gen 32 [--engine continuous|static] \
         [--n-slots 4] [--decode-block 8] [--temperature 0.7 --top-k 40] \
-        [--page-size 64 [--kv-pages N] [--prefill-chunk 256]] \
+        [--page-size 64 [--kv-pages N] [--prefill-chunk 256] [--share-prefix]] \
         [--compress-alpha 0.3 --q 4] [--kernels auto|xla|pallas|reference]
 
 ``--engine continuous`` (default) routes requests through
@@ -21,7 +21,10 @@ fixed-size pages shared by all slots through per-slot block tables,
 admission gated on each request's actual page need (``--kv-pages`` sizes
 the pool; default matches flat capacity), and — with ``--prefill-chunk`` —
 long prompts prefilled chunk-by-chunk interleaved with decode blocks so a
-long prefill no longer stalls running requests.
+long prefill no longer stalls running requests.  ``--share-prefix`` adds
+refcounted copy-on-write prompt-prefix sharing on top: repeated leading
+full pages (system-prompt traffic) are mapped read-only instead of
+re-allocated and re-prefilled.
 
 Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
 overrides the arch config's ``kernels`` field, and the dispatcher's hit
@@ -55,6 +58,12 @@ def main(argv=None):
                     help="prefill prompts longer than this in page-backed "
                     "chunks interleaved with decode; 0 = monolithic "
                     "(requires --page-size)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="refcounted copy-on-write prompt-prefix sharing: "
+                    "requests repeating an earlier prompt's leading full "
+                    "pages map them read-only and prefill only the "
+                    "unshared tail (requires --page-size; inert for "
+                    "families without mid-prompt prefill)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -125,7 +134,8 @@ def main(argv=None):
                      decode_block=args.decode_block,
                      page_size=args.page_size or None,
                      kv_pages=args.kv_pages or None,
-                     prefill_chunk=args.prefill_chunk or None)
+                     prefill_chunk=args.prefill_chunk or None,
+                     share_prefix=args.share_prefix)
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -158,6 +168,10 @@ def main(argv=None):
                   f"peak_active={eng.peak_active} "
                   f"prefill_chunks={eng.prefill_chunks} "
                   f"kv_bytes_cap={eng.kv_bytes_capacity}")
+            if args.share_prefix:
+                print(f"[shared] shared_pages={eng.shared_page_hits} "
+                      f"cow_forks={eng.cow_forks} "
+                      f"matched_admissions={eng.shared_admissions}")
         out = np.asarray([done[0].tokens], np.int32)
         print("first sequence:", done[0].tokens[:12])
 

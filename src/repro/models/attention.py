@@ -295,6 +295,22 @@ def trash_page(pool) -> int:
     return pool.shape[0] - 1
 
 
+def copy_page(pool, src, dst, *, axis: int = 0):
+    """Duplicate physical page ``src`` into ``dst`` along the pool's page
+    ``axis`` — the copy-on-write fork of shared-prefix serving.
+
+    Shared block-table entries are read-only by contract: when a slot's
+    prefill must re-enter the last matched prefix page (the whole prompt
+    was covered, but its final token still has to run to produce the
+    sampling logits), the engine forks that page with this and points the
+    slot's table at the private copy, so the writer never mutates storage
+    other slots are reading.  ``src``/``dst`` may be traced scalars (page
+    ids are runtime data — one compiled program covers every fork).
+    """
+    moved = jnp.moveaxis(pool, axis, 0)
+    return jnp.moveaxis(moved.at[dst].set(moved[src]), 0, axis)
+
+
 def _paged_write(pool, block_table, pos_v, rows, *, live=None):
     """Scatter token rows into their pages: logical position ``pos`` lives at
     ``pool[table[pos // page], pos % page]``.
@@ -529,6 +545,14 @@ def gqa_prefill_chunk(p, x, cache, cfg, bt_row, start, n_real):
     the chunk's K/V into the slot's pages FIRST, then attends over the
     gathered logical cache, so intra-chunk causality and attention to all
     previous chunks fall out of one absolute-position mask.
+
+    ``start`` is an arbitrary mid-prompt position — nothing here assumes
+    chunk 0 ran through this slot: positions ``< start`` are simply read
+    from whatever pages ``bt_row`` maps, which is what lets shared-prefix
+    admission skip straight to the first unshared token over READ-ONLY
+    prefix pages another request prefilled (``bt_row`` entries before
+    ``start // page`` are never written as long as ``start`` stays outside
+    them; the engine COW-forks the boundary page when it does not).
     """
     from repro.kernels.ref import gather_pages
 

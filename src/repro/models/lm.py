@@ -672,6 +672,16 @@ def lm_prefill_chunk(p, cache, tokens, cfg, *, bt_row, start, n_real):
     no sliding window) — build_model gates ``prefill_chunk`` accordingly;
     other families prefill monolithically.
 
+    This is also the serving stack's MID-PROMPT prefill entry point:
+    ``start`` need not be 0 and positions before it need not have been
+    written by this request at all — shared-prefix admission points
+    ``bt_row``'s leading entries at read-only pages another request
+    prefilled and starts the chunk loop at the first unshared position.
+    The only write targets are pages at or after ``start // page_size``
+    (the engine COW-forks that boundary page when it is shared), so the
+    mid-prompt contract needs no flag: it is a property of write-then-
+    attend over an explicit block-table row.
+
     Returns ``(last_logits (1, Vp), cache)`` where ``last_logits`` is taken
     at the chunk's last REAL token — only the final chunk's logits are
     meaningful to the caller.

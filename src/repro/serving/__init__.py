@@ -2,15 +2,25 @@
 
 Public surface:
   * :class:`Engine` / :class:`Request` — KV-pool engine (flat slots or a
-    paged pool with block tables + chunked prefill via ``page_size=``)
+    paged pool with block tables + chunked prefill via ``page_size=``,
+    plus refcounted copy-on-write prompt-prefix sharing via
+    ``share_prefix=``)
   * :class:`SamplingParams` — greedy / temperature / top-k, explicit PRNG
   * :class:`SlotAllocator` / :class:`PageAllocator` / :class:`Scheduler` —
-    admission control (slot- and page-gated)
+    admission control (slot- and page-gated, refcounted pages)
+  * :class:`PrefixIndex` / :class:`PageGrant` — prompt-prefix page index
+    and the reservation record shared-prefix admission hands the scheduler
 """
 
 from repro.serving.engine import Engine, Request
 from repro.serving.sampling import SamplingParams, sample_tokens
-from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
+from repro.serving.scheduler import (
+    PageAllocator,
+    PageGrant,
+    PrefixIndex,
+    Scheduler,
+    SlotAllocator,
+)
 
 __all__ = [
     "Engine",
@@ -20,4 +30,6 @@ __all__ = [
     "Scheduler",
     "SlotAllocator",
     "PageAllocator",
+    "PageGrant",
+    "PrefixIndex",
 ]

@@ -47,6 +47,23 @@ Greedy determinism contract: with temperature 0 the engine emits, per
 request, bit-identical tokens to ``serve_step.greedy_generate`` run on that
 prompt alone (tests/test_engine_parity.py) — the scheduler and the fused
 block change WHEN a sequence advances, never WHAT it computes.
+
+Prefix sharing (``share_prefix=True``, paged mode): admission matches a new
+request's prompt against a host-side :class:`PrefixIndex` of full
+prompt-prefix pages — live ones (still referenced by another slot) and
+cached ones (released but not yet re-granted: refcount 0, contents intact
+on the free list).  Matched pages are mapped into the slot's block table
+as READ-ONLY shared entries (one allocator reference each, counted once in
+``pages_in_use``); only the unshared tail is allocated and prefilled,
+entering the model MID-PROMPT through the chunked-prefill program at the
+first unshared position.  When the tail would re-enter a matched page (the
+whole prompt is covered: the last prompt token must still run to produce
+the sampling logits), that page is COW-FORKED — copied onto a private page
+— so a writer never mutates shared storage.  Because both the block-table
+Pallas kernel and the gather-einsum oracle index physical pages
+indirectly, aliased page ids need zero kernel changes, and greedy outputs
+stay bit-identical to the unshared paged run: sharing relocates bytes,
+never changes what is attended.
 """
 
 from __future__ import annotations
@@ -67,7 +84,13 @@ from repro.serving.sampling import (
     sample_tokens,
     token_salts,
 )
-from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
+from repro.serving.scheduler import (
+    PageAllocator,
+    PageGrant,
+    PrefixIndex,
+    Scheduler,
+    SlotAllocator,
+)
 
 __all__ = ["Request", "Engine", "SamplingParams", "percentile"]
 
@@ -248,6 +271,15 @@ class Engine:
     chunks processed ONE per engine step, interleaved with decode blocks —
     a long prompt's prefill no longer stalls running decodes for its whole
     length, bounding TTFT for short requests under long-prompt traffic.
+
+    ``share_prefix`` (paged mode, chunk-capable families) turns on
+    refcounted prompt-prefix sharing: requests whose prompts repeat an
+    earlier prompt's leading full pages (the common-system-prompt traffic
+    pattern) map those pages read-only instead of re-allocating and
+    re-prefilling them, so equal KV bytes admit strictly more concurrent
+    requests.  Inert (no behavior change) for families whose prefill
+    cannot enter mid-prompt (ssm/hybrid/swa/vlm/audio).  See the module
+    docstring for the matching / copy-on-write contract.
     """
 
     def __init__(
@@ -263,6 +295,7 @@ class Engine:
         page_size: Optional[int] = None,
         kv_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        share_prefix: bool = False,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
@@ -281,6 +314,9 @@ class Engine:
             if prefill_chunk < 1:
                 raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = prefill_chunk
+        if share_prefix and not self.paged:
+            raise ValueError("share_prefix requires page_size (paged mode)")
+        self.share_prefix = share_prefix
         if self.paged:
             if page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {page_size}")
@@ -296,15 +332,35 @@ class Engine:
             self._trash = self.kv_pages  # trash page id (attention.trash_page)
             self._bt = np.full((n_slots, self.max_pages), self._trash, np.int32)
             self._bt_dirty = True
+            # sharing needs (a) something actually paged to share and (b) a
+            # mid-prompt prefill entry point (the chunk program) for the
+            # unshared tail — otherwise the flag is inert, not an error, so
+            # one launcher config can cover mixed arch fleets
+            self._share = (
+                share_prefix and self._has_pages and model.prefill_chunk is not None
+            )
+            self._prefix = PrefixIndex(page_size) if self._share else None
+            # one chunk shape for BOTH long-prompt chunking and shared-tail
+            # prefill (two C values would compile two chunk programs)
+            self._chunk_C = (
+                prefill_chunk
+                if prefill_chunk is not None
+                else (page_size if self._share else None)
+            )
+            self.page_pool = PageAllocator(self.kv_pages)
             self.scheduler = Scheduler(
                 SlotAllocator(n_slots),
-                pages=PageAllocator(self.kv_pages),
-                page_need=self._page_need,
+                reserve=self._reserve,
+                release_grant=self._release_grant,
             )
         else:
             self.kv_pages = self.max_pages = 0
             self._paged_mask = None
             self._has_pages = False
+            self._share = False
+            self._prefix = None
+            self._chunk_C = None
+            self.page_pool = None
             self.scheduler = Scheduler(SlotAllocator(n_slots))
             with use_dispatch(self._dcfg):
                 self.cache = model.init_cache(n_slots, max_len)
@@ -325,8 +381,9 @@ class Engine:
             self._bytes_per_page * (self.kv_pages + 1) if self.paged else 0
         )
         self.kv_bytes_capacity = sum(l.nbytes for l in cache_leaves)
-        self._chunking: Dict[int, list] = {}  # slot -> [request, next_start]
+        self._chunking: Dict[int, list] = {}  # slot -> [request, next_start, row]
         self._chunk_jit = None
+        self._cow_fn = None  # jitted COW page copy (built on first fork)
         self._prefill_jit = jax.jit(
             lambda p, b, li: model.prefill(p, b, max_len, last_index=li)
         )
@@ -354,8 +411,12 @@ class Engine:
         self.host_syncs = 0  # fused-block host round-trips
         self.decoded_tokens = 0  # tokens emitted by decode (excl. prefill)
         self.peak_active = 0  # max concurrently admitted requests
-        self.peak_pages_in_use = 0  # max pages simultaneously allocated
         self.prefill_chunks = 0  # chunked-prefill chunks executed
+        # prefix-sharing accounting: pages mapped read-only instead of
+        # allocated+prefilled, COW forks taken, and admissions that matched
+        self.shared_page_hits = 0
+        self.cow_forks = 0
+        self.shared_admissions = 0
 
     # ------------------------------------------------------------------ #
     # submission / introspection
@@ -367,6 +428,97 @@ class Engine:
         if not self._has_pages:
             return 0
         return -(-(int(request.prompt.size) + request.max_new_tokens) // self.page_size)
+
+    def _reserve(self, request) -> Optional[PageGrant]:
+        """All-or-nothing page reservation for one request (Scheduler hook).
+
+        Matches the prompt's leading FULL pages against the prefix index,
+        takes one allocator reference per hit (reviving cached pages off
+        the free list), and allocates only the unshared remainder.  On
+        allocation failure every acquired reference is rolled back, so
+        admission stays atomic and strictly FIFO.  A shared page is
+        counted ONCE in ``pages_in_use`` no matter how many slots map it
+        (refcounts); zero-page archs get an EMPTY grant, which is a real
+        admission — only ``None`` means exhaustion.
+        """
+        need = self._page_need(request)
+        L = int(request.prompt.size)
+        peak0 = self.page_pool.peak_used  # restored if this transaction fails
+        acquired: List[int] = []
+        # L >= 2 keeps the mid-prompt entry at start >= 1: a fully-matched
+        # single-token prompt would otherwise degenerate to start == 0
+        if self._share and L >= 2:
+            for p in self._prefix.match(request.prompt):
+                if len(acquired) >= need or not self.page_pool.acquire(p):
+                    break
+                acquired.append(p)
+        k = len(acquired)
+        start = k * self.page_size if k else 0
+        if k and start == L:
+            # the whole prompt is covered by matched pages — but the last
+            # prompt token must still run (its logits seed sampling), so
+            # re-enter mid-page and COW-fork the page it re-writes
+            start = L - 1
+        fork = bool(k) and (start // self.page_size) < k
+        fresh = self.page_pool.alloc(need - k + (1 if fork else 0))
+        if fresh is None and fork:
+            # The fork wants one page BEYOND the request's declared
+            # footprint, but submit() only guarantees need <= kv_pages —
+            # retrying the identical transaction could LIVELOCK (a full
+            # pool never grows).  Degrade instead: un-share the boundary
+            # page (its tail prefills like any unshared page) and retry
+            # at exactly ``need``, which the pool can always eventually
+            # satisfy.
+            self.page_pool.free([acquired.pop()])
+            k -= 1
+            start = k * self.page_size
+            fork = False
+            fresh = self.page_pool.alloc(need - k)
+        if fresh is None:
+            if acquired:
+                self.page_pool.free(acquired)
+            # atomic: with every ref rolled back (including one the COW
+            # degrade gave back above), restore the high-water mark any
+            # revive raised — those pages never backed admitted work, and
+            # the head-of-queue retry re-runs this every step.  A no-op
+            # when nothing was revived.
+            self.page_pool.rollback_peak(peak0)
+            return None
+        if self._prefix is not None and fresh:
+            # fresh pages are about to be WRITTEN: any cached prefix entry
+            # still pointing at them is dead
+            self._prefix.drop_pages(fresh)
+        if fork:
+            grant = PageGrant(
+                pages=acquired[:-1] + [fresh[0]] + fresh[1:],
+                n_shared=k - 1,
+                start=start,
+                cow=(acquired[-1], fresh[0]),
+                refs=acquired + fresh,  # pin the COW source until release
+            )
+        else:
+            grant = PageGrant(pages=acquired + fresh, n_shared=k, start=start)
+        if k:
+            self.shared_admissions += 1
+            self.shared_page_hits += grant.n_shared
+        return grant
+
+    def _release_grant(self, grant: PageGrant) -> None:
+        """Drop one reference on every page the grant holds (Scheduler
+        hook).  Shared pages survive until their LAST reader releases;
+        pages hitting refcount 0 return to the free list but stay in the
+        prefix index (a warm cache) until re-granted for writing."""
+        if grant.refs:
+            self.page_pool.free(grant.refs)
+
+    def reset_prefix_cache(self) -> None:
+        """Forget every prefix-index entry (benchmark warmup boundary).
+
+        Refcounts and live allocations are untouched — already-admitted
+        slots keep their shared pages; only FUTURE admissions stop
+        matching until new prompts re-register."""
+        if self._prefix is not None:
+            self._prefix.clear()
 
     def submit(self, request: Request) -> Request:
         if request.prompt.size + request.max_new_tokens > self.max_len:
@@ -409,7 +561,17 @@ class Engine:
 
     @property
     def pages_in_use(self) -> int:
-        return self.scheduler.pages.n_used if self.paged else 0
+        """Distinct physical pages currently referenced — a page shared by
+        several slots is counted ONCE (it occupies one page of HBM)."""
+        return self.page_pool.n_used if self.paged else 0
+
+    @property
+    def peak_pages_in_use(self) -> int:
+        """Allocator-owned high-water page count: raised inside every
+        allocation-changing operation (admission alloc, prefix acquire,
+        COW fork), so pages held across chunked-prefill-only steps — or
+        across a ``reset_counters`` boundary — are always observed."""
+        return self.page_pool.peak_used if self.paged else 0
 
     @property
     def kv_bytes_in_use(self) -> int:
@@ -436,9 +598,19 @@ class Engine:
         return self._bytes_resident + self._bytes_per_page * self.peak_pages_in_use
 
     def reset_counters(self):
-        """Zero the perf/accounting counters (benchmark warmup boundary)."""
+        """Re-arm the perf/accounting counters (benchmark warmup boundary).
+
+        Peaks re-arm to CURRENT usage, not zero: allocations held across
+        the boundary (a request mid-chunked-prefill, live slots) would
+        otherwise peak unobserved if no later admission re-sampled them,
+        under-reporting ``kv_bytes_peak``.
+        """
         self.steps = self.host_syncs = self.decoded_tokens = 0
-        self.peak_active = self.peak_pages_in_use = self.prefill_chunks = 0
+        self.prefill_chunks = 0
+        self.shared_page_hits = self.cow_forks = self.shared_admissions = 0
+        self.peak_active = self.scheduler.allocator.n_active
+        if self.paged:
+            self.page_pool.reset_peak()
 
     # ------------------------------------------------------------------ #
     # admission + prefill
@@ -505,6 +677,13 @@ class Engine:
                 )
                 merged["block_table"] = self.cache["block_table"]
                 self.cache = merged
+                if self._share:
+                    # registration is DEFERRED to here (not admission) so a
+                    # match can never alias pages whose prefill has not
+                    # landed on device yet — same-round admissions simply
+                    # miss the sharing opportunity once
+                    for slot, req in group:
+                        self._prefix.register(req.prompt, self._bt[slot])
             else:
                 self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
             first = self._sample(logits, padded_reqs, [0] * G)
@@ -593,21 +772,56 @@ class Engine:
             self.cache["block_table"] = jnp.asarray(self._bt)
             self._bt_dirty = False
 
+    def _cow_fork(self, src: int, dst: int):
+        """Copy physical page ``src`` onto ``dst`` in every paged leaf.
+
+        The copy-on-write step of shared-prefix admission: the forked slot
+        writes its last prompt token (and nothing else) into ``dst``, so
+        the shared original is never mutated.  ``src``'s content is pinned
+        by the grant's extra reference until release, so the copy can
+        never race a re-grant.  One jitted program per engine (page ids
+        are runtime data), pools donated — no pool copy materializes.
+        """
+        from repro.models.attention import copy_page
+
+        if self._cow_fn is None:
+            mask = self._paged_mask
+
+            def cow(pools, s, d):
+                return jax.tree_util.tree_map(
+                    lambda pl, m: (
+                        copy_page(pl, s, d, axis=_cache_batch_axis(pl)) if m else pl
+                    ),
+                    pools,
+                    mask,
+                )
+
+            self._cow_fn = jax.jit(cow, donate_argnums=(0,))
+        pools = {k: v for k, v in self.cache.items() if k != "block_table"}
+        with use_dispatch(self._dcfg):
+            pools = self._cow_fn(pools, jnp.int32(src), jnp.int32(dst))
+        pools["block_table"] = self.cache["block_table"]
+        self.cache = pools
+        self.cow_forks += 1
+
     # ------------------------------------------------------------------ #
     # chunked prefill (paged mode): one chunk per engine step
     # ------------------------------------------------------------------ #
-    def _chunk_step(self) -> List[Request]:
-        """Run ONE prefill chunk for the oldest chunking request.
+    def _chunk_step(self):
+        """Run ONE prefill chunk for the oldest chunking request; returns
+        ``(finished, n_real)`` — the requests completed by this chunk and
+        how many REAL prompt tokens it processed (the step loop's budget
+        currency).
 
-        Chunks are a fixed (1, prefill_chunk) shape (the last chunk of a
-        prompt is right-padded; ``n_real`` masks the tail), so live traffic
-        compiles exactly one chunk program per arch.  The final chunk's
-        logits sample the request's first token and the slot joins the
-        decode batch at the next block.
+        Chunks are a fixed (1, chunk) shape (the last chunk of a prompt is
+        right-padded; ``n_real`` masks the tail), so live traffic compiles
+        exactly one chunk program per arch.  The final chunk's logits
+        sample the request's first token and the slot joins the decode
+        batch at the next block.
         """
         slot = next(iter(self._chunking))  # dict preserves admission order
         req, start, row = self._chunking[slot]
-        C = self.prefill_chunk
+        C = self._chunk_C
         plen = int(req.prompt.size)
         n = min(C, plen - start)
         toks = np.zeros((1, C), np.int32)
@@ -631,16 +845,20 @@ class Engine:
         start += n
         if start < plen:
             self._chunking[slot][1] = start
-            return []
+            return [], n
         del self._chunking[slot]
         # last chunk landed: publish the row so the decode block (and its
         # page writes) see the slot's pages from here on
         self._bt[slot] = row
         self._bt_dirty = True
+        if self._share:
+            # the prompt's full pages are now completely written on device:
+            # safe to offer them to future admissions
+            self._prefix.register(req.prompt, row)
         first = self._sample(logits, [req], [0])
         self._activate_slot(slot, req, plen, int(first[0]), time.perf_counter())
         done = self._maybe_finish(slot)
-        return [done] if done is not None else []
+        return ([done] if done is not None else []), n
 
     # ------------------------------------------------------------------ #
     # the fused decode block (device-resident inner loop)
@@ -712,9 +930,10 @@ class Engine:
         finished: List[Request] = []
 
         placed = self.scheduler.admit()
-        if self.paged and placed:
-            self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
         if placed:
+            # page peaks are tracked INSIDE the allocator at every
+            # allocation-changing site; only the admitted-request peak is
+            # engine-level state
             self.peak_active = max(self.peak_active, self.scheduler.allocator.n_active)
 
         chunking = (
@@ -725,11 +944,22 @@ class Engine:
         direct = []
         for slot, req in placed:
             row = None
+            grant = None
             if self.paged:
-                pages = self.scheduler.slot_pages[slot]
+                grant = self.scheduler.slot_pages[slot]
                 row = np.full((self.max_pages,), self._trash, np.int32)
-                row[: len(pages)] = pages
-            if chunking and req.prompt.size > self.prefill_chunk:
+                row[: len(grant.pages)] = grant.pages
+            if grant is not None and grant.start > 0:
+                # Shared-prefix admission: the matched pages' K/V is already
+                # resident, so prefill SKIPS them entirely and enters the
+                # model mid-prompt (grant.start) through the chunk program.
+                # When the tail re-enters the last matched page (whole
+                # prompt covered), COW-fork it first so the re-write of the
+                # final prompt token never lands in shared storage.
+                if grant.cow is not None:
+                    self._cow_fork(*grant.cow)
+                self._chunking[slot] = [req, grant.start, row]
+            elif chunking and req.prompt.size > self.prefill_chunk:
                 # The slot's DEVICE table row stays on trash until the last
                 # chunk lands: the fused block's frozen-slot re-feeds write
                 # through the table at position 0, and a published row would
@@ -748,9 +978,17 @@ class Engine:
                 finished.extend(self._prefill_group(group))
 
         if self._chunking:
-            # ONE chunk per step: long-prompt prefill is interleaved with
-            # the decode block below instead of stalling it wholesale
-            finished.extend(self._chunk_step())
+            # Prefill budget of ~C REAL tokens per step: a full long-prompt
+            # chunk consumes it whole (the classic one-chunk-per-step
+            # interleave, so a long prefill still never stalls running
+            # decodes), while SHORT tails — shared-prefix admissions
+            # prefilling only their unshared suffix — pack into one step
+            # instead of trickling one admission per decode block.
+            budget = self._chunk_C
+            while self._chunking and budget > 0:
+                done, n_real = self._chunk_step()
+                finished.extend(done)
+                budget -= max(n_real, 1)
 
         if not self._active.any():
             return finished

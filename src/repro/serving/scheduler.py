@@ -16,6 +16,18 @@ slot exhaustion; admission stays strictly FIFO (a large request at the head
 waits rather than being bypassed — deterministic traces over throughput
 tricks).
 
+The allocator is REFCOUNTED: one physical page may back several slots'
+block tables at once (shared prompt-prefix pages — see
+:class:`PrefixIndex` and the engine's copy-on-write admission path).
+``alloc`` grants fresh pages at refcount 1, ``acquire`` adds a reader (or
+revives a cached, refcount-0 page off the free list with its contents
+intact), and ``free`` decrements — a page returns to the free list only
+when its LAST reader releases it.  Refcounting also structurally closes
+the boolean-owned allocator's duplicate-free bug: a single ``free`` call
+rejects duplicate ids before mutating anything, so a page can never be
+pushed onto the free list twice and later granted to two slots (silent KV
+aliasing).
+
 Pure host-side bookkeeping: no jax imports, trivially unit-testable
 (tests/test_scheduler.py).
 """
@@ -23,9 +35,19 @@ Pure host-side bookkeeping: no jax imports, trivially unit-testable
 from __future__ import annotations
 
 import collections
-from typing import Callable, Deque, List, Optional, Tuple
+import dataclasses
+import hashlib
+from typing import Callable, Deque, Iterator, List, Optional, Tuple
 
-__all__ = ["SlotAllocator", "PageAllocator", "Scheduler"]
+import numpy as np
+
+__all__ = [
+    "SlotAllocator",
+    "PageAllocator",
+    "PageGrant",
+    "PrefixIndex",
+    "Scheduler",
+]
 
 
 class SlotAllocator:
@@ -72,15 +94,38 @@ class SlotAllocator:
 
 
 class PageAllocator:
-    """Free-list allocator over ``n_pages`` fixed-size KV-cache pages.
+    """Refcounted allocator over ``n_pages`` fixed-size KV-cache pages.
 
     ``alloc(n)`` is ALL-OR-NOTHING: it returns the ``n`` lowest free page
-    ids (deterministic reuse order, mirroring :class:`SlotAllocator`) or
-    None — never a partial grant, so a request can never be admitted into a
-    half-backed cache.  Pages are unit-sized, so the pool cannot fragment:
-    any ``n <= n_free`` request succeeds, and ``free`` reclaims a slot's
-    whole page set at once.  ``extend`` grows an existing allocation with
-    the same all-or-nothing contract.
+    ids at refcount 1 (deterministic reuse order, mirroring
+    :class:`SlotAllocator`) or None — never a partial grant, so a request
+    can never be admitted into a half-backed cache.  Pages are unit-sized,
+    so the pool cannot fragment: any ``n <= n_free`` request succeeds.
+    ``extend`` grows an existing allocation with the same all-or-nothing
+    contract.
+
+    ``acquire(p)`` adds one READER to page ``p``: a live page
+    (refcount >= 1) gets one more reference; a cached page (refcount 0 —
+    back on the free list, contents still intact because only a fresh
+    ``alloc`` hands a page to a writer) is revived off the free list to
+    refcount 1.  This is the substrate for shared prompt-prefix pages: a
+    shared page is counted ONCE in ``n_used`` no matter how many block
+    tables map it.
+
+    ``free`` DECREMENTS: a page returns to the free list only when its
+    last reader releases it.  A single call validates the WHOLE list —
+    range, liveness, and no duplicate ids — before mutating anything.
+    (The boolean-owned predecessor also validated before mutating, but
+    had no duplicate check: ``free([p, p])`` passed ownership twice and
+    pushed ``p`` onto the free list twice, so a later ``alloc`` granted
+    the same physical page to two slots — silent KV aliasing.)
+
+    ``peak_used`` is the allocator-owned high-water mark, raised inside
+    the only two operations that can grow usage (``alloc`` / ``acquire``)
+    — so peaks are observed no matter which engine path allocated
+    (admission, chunked prefill, COW fork), rather than being sampled on
+    one engine code path.  ``reset_peak`` re-arms it to CURRENT usage,
+    not zero: pages held across a counter reset stay observed.
     """
 
     def __init__(self, n_pages: int):
@@ -88,7 +133,8 @@ class PageAllocator:
             raise ValueError(f"n_pages must be >= 0, got {n_pages}")
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, -1, -1))  # stack, lowest id on top
-        self._owned = [False] * n_pages
+        self._ref = [0] * n_pages
+        self._peak = 0
 
     @property
     def n_free(self) -> int:
@@ -98,6 +144,33 @@ class PageAllocator:
     def n_used(self) -> int:
         return self.n_pages - len(self._free)
 
+    @property
+    def peak_used(self) -> int:
+        return self._peak
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def reset_peak(self) -> None:
+        self._peak = self.n_used
+
+    def rollback_peak(self, peak: int) -> None:
+        """Restore a pre-transaction high-water mark after an all-or-nothing
+        reservation FAILED and every reference it took was rolled back.
+
+        Without this, a reservation that acquires k shared pages and then
+        fails its tail alloc would leave ``peak_used`` inflated by pages
+        that never backed any admitted work — and the head-of-queue retry
+        in the scheduler re-runs that transaction every step.  Only valid
+        when usage is actually back to (or below) the saved mark.
+        """
+        if not (self.n_used <= peak <= self._peak):
+            raise ValueError(
+                f"rollback_peak({peak}) with n_used={self.n_used}, "
+                f"peak_used={self._peak}: references were not rolled back"
+            )
+        self._peak = peak
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:
             raise ValueError(f"cannot alloc {n} pages")
@@ -105,8 +178,25 @@ class PageAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
-            self._owned[p] = True
+            self._ref[p] = 1
+        self._peak = max(self._peak, self.n_used)
         return pages
+
+    def acquire(self, page: int) -> bool:
+        """Add a reader to ``page`` (share a live page / revive a cached one)."""
+        if not (0 <= page < self.n_pages):
+            return False
+        if self._ref[page] == 0:
+            # cached page: still on the free list, contents intact — revive
+            try:
+                self._free.remove(page)
+            except ValueError:  # not free and not referenced: cannot happen
+                return False
+            self._ref[page] = 1
+            self._peak = max(self._peak, self.n_used)
+        else:
+            self._ref[page] += 1
+        return True
 
     def extend(self, pages: List[int], n: int) -> Optional[List[int]]:
         """Grow an allocation in place by ``n`` pages (all-or-nothing).
@@ -124,15 +214,153 @@ class PageAllocator:
         return pages
 
     def free(self, pages: List[int]) -> None:
+        """Release one reference on every page in ``pages``.
+
+        Validates the whole list BEFORE mutating — including rejecting
+        duplicate ids within the call, which is what makes the
+        validate-then-mutate order safe (see class docstring).
+        """
+        seen = set()
         for p in pages:
             if not (0 <= p < self.n_pages):
                 raise ValueError(f"page {p} out of range [0, {self.n_pages})")
-            if not self._owned[p]:
+            if p in seen:
+                raise ValueError(f"duplicate page {p} in free()")
+            seen.add(p)
+            if self._ref[p] < 1:
                 raise ValueError(f"double free of page {p}")
         for p in pages:
-            self._owned[p] = False
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
         self._free.sort(reverse=True)  # deterministic reuse order
+
+
+@dataclasses.dataclass
+class PageGrant:
+    """One admitted request's page reservation (the reserve-hook currency).
+
+    ``pages`` — the slot's block-table entries in logical order (length ==
+    the request's page need).  The leading ``n_shared`` entries are
+    READ-ONLY shared prefix pages (refcounted; possibly backing other
+    slots too) — the engine never writes through them.  ``start`` — first
+    prompt position the engine must still prefill (0 when nothing was
+    shared; the matched prefix's K/V is already resident).  ``cow`` —
+    optional ``(src, dst)`` physical pair: the engine must copy page
+    ``src`` onto ``dst`` BEFORE any write lands in ``dst`` (the
+    copy-on-write fork of the last prefix page, taken when the tail
+    re-enters a matched page).  ``refs`` — every page id holding one of
+    this grant's allocator references, freed together on release:
+    ``pages`` plus the COW source, whose content must stay pinned at
+    least until the fork copy has run.
+
+    An EMPTY grant (``pages == []``) is a real admission — zero-page
+    archs (mamba state, SWA rings: nothing paged) reserve nothing but
+    still occupy a slot.  Exhaustion is signalled by ``reserve`` returning
+    ``None``, never by emptiness.
+    """
+
+    pages: List[int]
+    n_shared: int = 0
+    start: int = 0
+    cow: Optional[Tuple[int, int]] = None
+    refs: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.refs is None:
+            self.refs = list(self.pages)
+
+
+class PrefixIndex:
+    """Content index of FULL prompt-prefix pages for cross-request sharing.
+
+    A page's K/V depends on every token at or before it, so the key for
+    page ``i`` is the ENTIRE token prefix it closes over —
+    ``prompt[: (i + 1) * page_size]`` — not just the page's own tokens.
+    ``match`` walks the longest chain of indexed full pages from the
+    prompt's head; only pages fully covered by the prompt participate
+    (a partial last page is never indexed: its storage still gets written
+    by the owner's decode stream).
+
+    Entries PERSIST after the owning request releases its pages: a
+    refcount-0 page sits on the allocator free list with contents intact
+    — a warm prefix cache.  The engine calls :meth:`drop_pages` the
+    moment the allocator re-grants a page for writing, so a match can
+    never alias rewritten storage.  Registration is deferred until the
+    owner's prefill has actually landed on device (the engine registers
+    post-scatter / post-last-chunk), so a match never reads pages that
+    are still being computed.
+
+    Host-side bookkeeping only.  Keys are CHAINED digests — page ``i``'s
+    key hashes page ``i - 1``'s key together with page ``i``'s own token
+    bytes — so a key still commits to the entire prefix while
+    registration/matching stay O(pages) in time and memory (materializing
+    ``prompt[:(i + 1) * page_size]`` per page would be quadratic: ~130 MB
+    of key bytes for a 32k prompt at 64-token pages).  One key maps to at
+    most one page and vice versa.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self._by_key: dict = {}
+        self._by_page: dict = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def _page_keys(self, prompt: np.ndarray) -> Iterator[bytes]:
+        """Chained per-full-page keys; each commits to the whole prefix."""
+        arr = np.ascontiguousarray(np.asarray(prompt, np.int32))
+        P = self.page_size
+        key = b""
+        for i in range(len(arr) // P):
+            key = hashlib.blake2b(
+                key + arr[i * P : (i + 1) * P].tobytes(), digest_size=16
+            ).digest()
+            yield key
+
+    def register(self, prompt: np.ndarray, pages) -> None:
+        """Index every FULL page of ``prompt`` backed by ``pages``.
+
+        ``pages[i]`` must be the physical page holding positions
+        ``[i * page_size, (i + 1) * page_size)`` (the slot's block-table
+        row works verbatim).  First registration wins: an existing entry
+        for the same key is kept — its page already holds identical
+        content, and churning entries would invalidate live matches for
+        no gain.
+        """
+        for i, key in enumerate(self._page_keys(prompt)):
+            if key in self._by_key:
+                continue
+            page = int(pages[i])
+            old = self._by_page.pop(page, None)
+            if old is not None:  # page re-registered under new content
+                del self._by_key[old]
+            self._by_key[key] = page
+            self._by_page[page] = key
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Longest chain of indexed full-prefix pages for ``prompt``."""
+        chain: List[int] = []
+        for key in self._page_keys(prompt):
+            page = self._by_key.get(key)
+            if page is None:
+                break
+            chain.append(page)
+        return chain
+
+    def drop_pages(self, pages) -> None:
+        """Forget entries whose physical page is being re-granted to a writer."""
+        for p in pages:
+            key = self._by_page.pop(int(p), None)
+            if key is not None:
+                del self._by_key[key]
+
+    def clear(self) -> None:
+        self._by_key.clear()
+        self._by_page.clear()
 
 
 class Scheduler:
@@ -141,25 +369,30 @@ class Scheduler:
     ``enqueue`` never blocks; ``admit`` drains the queue into free slots and
     returns the (slot, request) placements made this round.
 
-    With ``pages``/``page_need`` (paged engine), admission additionally
-    reserves each request's page set up front — both resources or neither —
-    and ``release`` returns pages with the slot.  ``slot_pages[slot]`` holds
-    the admitted request's page ids (the engine writes them into its block
-    table).
+    Paged engines additionally pass ``reserve``/``release_grant`` hooks:
+    ``reserve(req)`` returns an opaque grant (:class:`PageGrant` in
+    practice — possibly EMPTY for zero-page archs) or ``None`` on
+    exhaustion; the grant lands in ``slot_pages[slot]`` and is handed back
+    to ``release_grant`` when the slot frees.  Hook-shaped reservation is
+    what lets admission do prefix matching + copy-on-write page
+    reservation atomically while this class stays resource-agnostic.
+
+    Exhaustion is detected with ``is None`` EXCLUSIVELY — an empty grant
+    (``[]`` / ``PageGrant(pages=[])``) admits normally (zero-page archs).
     """
 
     def __init__(
         self,
         allocator: SlotAllocator,
         *,
-        pages: Optional[PageAllocator] = None,
-        page_need: Optional[Callable[[object], int]] = None,
+        reserve: Optional[Callable[[object], Optional[object]]] = None,
+        release_grant: Optional[Callable[[object], None]] = None,
     ):
-        if (pages is None) != (page_need is None):
-            raise ValueError("pages and page_need come together")
+        if (reserve is None) != (release_grant is None):
+            raise ValueError("reserve and release_grant come together")
         self.allocator = allocator
-        self.pages = pages
-        self.page_need = page_need
+        self.reserve = reserve
+        self.release_grant = release_grant
         self.slot_pages: dict = {}
         self.queue: Deque = collections.deque()
 
@@ -173,18 +406,18 @@ class Scheduler:
     def admit(self) -> List[Tuple[int, object]]:
         placed = []
         while self.queue and self.allocator.n_free:
-            if self.pages is not None:
-                pg = self.pages.alloc(self.page_need(self.queue[0]))
-                if pg is None:  # page exhaustion queues; strict FIFO
+            if self.reserve is not None:
+                grant = self.reserve(self.queue[0])
+                if grant is None:  # page exhaustion queues; strict FIFO
                     break
                 slot = self.allocator.alloc()
-                self.slot_pages[slot] = pg
+                self.slot_pages[slot] = grant
             else:
                 slot = self.allocator.alloc()
             placed.append((slot, self.queue.popleft()))
         return placed
 
     def release(self, slot: int) -> None:
-        if self.pages is not None:
-            self.pages.free(self.slot_pages.pop(slot))
+        if self.reserve is not None:
+            self.release_grant(self.slot_pages.pop(slot))
         self.allocator.free(slot)

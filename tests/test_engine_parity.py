@@ -331,6 +331,133 @@ def test_engine_eos_stops_inside_fused_block():
     assert req.tokens[-1] == eos
 
 
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_shared_prefix_engine_greedy_parity(arch_id):
+    """share_prefix is a pure MEMORY knob: with a common system prefix (2
+    full pages) the sharing engine must emit tokens bit-identical to the
+    unshared paged run — forked suffixes diverge where their tokens
+    diverge and nowhere else — for every arch.  Chunk-capable attention
+    families actually map shared pages (asserted via the hit counter);
+    recurrent / window / cross-modal families run the same engine with
+    sharing inert, which must change nothing."""
+    cfg = get_arch(arch_id, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    sys = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    prompts = [
+        np.concatenate([sys, rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)]),
+        np.concatenate([sys, rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)]),
+    ]
+    extras = [modality_extras(cfg, rng), modality_extras(cfg, rng)]
+    steps = [4, 5]
+
+    outs = {}
+    for share in (False, True):
+        eng = Engine(
+            model, params, n_slots=2, max_len=MAX_LEN, page_size=4,
+            share_prefix=share,
+        )
+        r0 = eng.submit(
+            Request(prompt=prompts[0], max_new_tokens=steps[0], extras=extras[0])
+        )
+        eng.step()
+        eng.step()  # r0 mid-decode (its prefix pages registered) when r1 arrives
+        r1 = eng.submit(
+            Request(prompt=prompts[1], max_new_tokens=steps[1], extras=extras[1])
+        )
+        while eng.has_work:
+            eng.step()
+        outs[share] = [r0.tokens, r1.tokens]
+        chunkable = cfg.family in ("dense", "moe") and cfg.sliding_window is None
+        if share and chunkable:
+            # r1 mapped the two full sys pages read-only
+            assert eng.shared_page_hits == 2, f"no sharing for {arch_id}"
+        elif share:
+            assert eng.shared_page_hits == 0  # inert, by design
+    assert outs[True] == outs[False], f"shared-prefix parity broken for {arch_id}"
+    # and both agree with the solo reference
+    assert outs[True][0] == _reference(model, params, prompts[0], extras[0], steps[0])
+    assert outs[True][1] == _reference(model, params, prompts[1], extras[1], steps[1])
+
+
+def test_shared_prefix_cow_fork_exact_page_boundary():
+    """A follower whose ENTIRE prompt is covered by matched pages (prompt
+    length an exact page multiple) re-runs only its final token — after
+    COW-forking the last prefix page, so the re-write lands in a private
+    copy and never in shared storage.  Its tokens, the donor's continued
+    decode, and a third same-prefix request admitted after both finish
+    (warm-cache revive) must all match the unshared run bit-exactly."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)  # 2 pages exactly
+    steps = [6, 5, 4]
+
+    outs = {}
+    for share in (False, True):
+        eng = Engine(
+            model, params, n_slots=2, max_len=MAX_LEN, page_size=4,
+            share_prefix=share, decode_block=1,
+        )
+        r0 = eng.submit(Request(prompt=prompt, max_new_tokens=steps[0]))
+        eng.step()
+        eng.step()
+        r1 = eng.submit(Request(prompt=prompt, max_new_tokens=steps[1]))
+        while eng.has_work:
+            eng.step()
+        r2 = eng.submit(Request(prompt=prompt, max_new_tokens=steps[2]))
+        while eng.has_work:
+            eng.step()
+        outs[share] = [r0.tokens, r1.tokens, r2.tokens]
+        if share:
+            # r1 forked the partially-re-written last prefix page; r2
+            # matched the CACHED pages after everyone released them
+            assert eng.cow_forks == 2 and eng.shared_admissions == 2
+    assert outs[True] == outs[False]
+
+
+def test_shared_prefix_parity_under_page_churn():
+    """Same-prefix requests against a pool too small for all of them:
+    admission queues on pages, shared pages recycle only after their last
+    reader releases, and a foreign-prefix request interleaves — every
+    request still matches its solo reference exactly."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    sys = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    prompts = [
+        np.concatenate([sys, rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)]),
+        np.concatenate([sys, rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)]),
+        np.concatenate([sys, rng.integers(0, cfg.vocab, size=(1,)).astype(np.int32)]),
+        rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32),  # foreign prefix
+    ]
+    steps = [4, 5, 3, 3]
+    refs = [
+        _reference(model, params, p, {}, s) for p, s in zip(prompts, steps)
+    ]
+    eng = Engine(
+        model, params, n_slots=4, max_len=MAX_LEN, page_size=4, kv_pages=8,
+        share_prefix=True, decode_block=1,
+    )
+    reqs = [eng.submit(Request(prompt=prompts[0], max_new_tokens=steps[0]))]
+    eng.step()  # donor registered (4 pages held)
+    for p, s in zip(prompts[1:], steps[1:]):
+        reqs.append(eng.submit(Request(prompt=p, max_new_tokens=s)))
+    eng.step()
+    # r1 shares 2 + allocs 2 (6 used), r2 shares 2 + allocs 1 (7 used);
+    # the foreign request needs 3 fresh pages -> queues on the 1 free page
+    assert eng.n_waiting == 1 and eng.pages_in_use == 7
+    assert eng.shared_page_hits == 4 and eng.shared_admissions == 2
+    while eng.has_work:
+        eng.step()
+    for i, (req, ref) in enumerate(zip(reqs, refs)):
+        assert req.tokens == ref, f"request {i} diverged under shared-page churn"
+    assert eng.pages_in_use == 0
+
+
 def test_engine_sampling_deterministic_across_interleavings():
     """A stochastic request's tokens are a pure function of (seed, prompt) —
     independent of what else shares the batch."""

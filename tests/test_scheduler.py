@@ -1,13 +1,20 @@
 """Unit tests for the serving slot/page allocators and scheduler, plus
 engine-level lifecycle properties (exhaustion queues, reuse, no cache
-leakage) for both the flat and the paged KV pool."""
+leakage) for both the flat and the paged KV pool — including refcounted
+shared-prefix pages, the duplicate-free regression, zero-page-arch
+lifecycles, and allocation-peak accounting."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.scheduler import PageAllocator, Scheduler, SlotAllocator
+from repro.serving.scheduler import (
+    PageAllocator,
+    PrefixIndex,
+    Scheduler,
+    SlotAllocator,
+)
 
 
 # --------------------------------------------------------------------------- #
@@ -102,13 +109,141 @@ def test_page_allocator_extend_and_double_free():
         a.free([99])  # out of range
 
 
+def test_page_allocator_duplicate_free_rejected():
+    """Regression (PR 5): the boolean-owned allocator validated the WHOLE
+    list before mutating, so ``free([p, p])`` passed the ownership check
+    twice and pushed ``p`` onto the free list twice — a later ``alloc``
+    then granted the same physical page to two slots (silent KV aliasing).
+    The refcounted allocator rejects duplicates within a call BEFORE any
+    mutation, so the failed call leaves the allocator untouched."""
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.free([pages[0], pages[0]])
+    # the rejected call mutated NOTHING
+    assert a.n_free == 2 and a.refcount(pages[0]) == 1
+    a.free(pages)
+    assert a.n_free == 4
+    # and the old failure mode is structurally impossible now: disjoint
+    # grants can never alias a physical page
+    g1, g2 = a.alloc(2), a.alloc(2)
+    assert not set(g1) & set(g2)
+
+
+def test_page_allocator_refcount_share_and_last_reader_release():
+    a = PageAllocator(4)
+    pages = a.alloc(2)  # refcount 1 each
+    assert all(a.acquire(p) for p in pages)  # a second reader per page
+    assert a.n_used == 2  # a shared page is counted ONCE
+    a.free(pages)  # first reader releases...
+    assert a.n_used == 2 and a.n_free == 2  # ...pages stay referenced
+    a.free(pages)  # last reader releases
+    assert a.n_used == 0 and a.n_free == 4
+    with pytest.raises(ValueError):
+        a.free([pages[0]])  # refcount already 0
+
+
+def test_page_allocator_acquire_revives_cached_page():
+    """A released page (refcount 0, back on the free list, contents intact)
+    can be revived by a new reader — the warm-prefix-cache mechanism — and
+    while revived it is NOT grantable to writers."""
+    a = PageAllocator(2)
+    (p,) = a.alloc(1)
+    a.free([p])  # cached
+    assert a.acquire(p)
+    assert a.refcount(p) == 1 and a.n_free == 1
+    assert a.alloc(2) is None  # the revived page cannot be re-granted
+    a.free([p])
+    assert a.n_free == 2
+
+
+def test_page_allocator_peak_tracks_every_alloc_site():
+    """``peak_used`` is raised inside alloc() AND acquire() — the only two
+    operations that can grow usage — and ``reset_peak`` re-arms to CURRENT
+    usage so held allocations stay observed across a counter reset."""
+    a = PageAllocator(8)
+    g = a.alloc(5)
+    a.free(g)
+    assert a.peak_used == 5
+    a.reset_peak()
+    assert a.peak_used == 0
+    g = a.alloc(3)
+    a.reset_peak()  # pages still held: the reset must NOT lose them
+    assert a.peak_used == 3
+    a.free([g[0]])  # cached now
+    assert a.acquire(g[0])  # revive raises usage again
+    extra = a.alloc(2)
+    assert a.peak_used == 5
+    a.free(g + extra)
+
+
+def test_page_allocator_rollback_peak_on_failed_reservation():
+    """A failed all-or-nothing reservation that revived cached pages must
+    be able to restore the high-water mark after rolling its refs back —
+    otherwise retried head-of-queue admissions report phantom peaks."""
+    a = PageAllocator(4)
+    g = a.alloc(2)
+    a.free(g)  # two cached pages
+    a.reset_peak()
+    assert a.peak_used == 0
+    peak0 = a.peak_used
+    assert a.acquire(g[0])  # revive raises usage (and the peak) to 1
+    assert a.peak_used == 1
+    assert a.alloc(4) is None  # the reservation's tail cannot fit
+    a.free([g[0]])  # roll the reference back...
+    a.rollback_peak(peak0)  # ...and the phantom peak with it
+    assert a.peak_used == 0
+    with pytest.raises(ValueError):
+        a.rollback_peak(3)  # the mark can only be restored, never raised
+    b = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.rollback_peak(1)  # refs NOT rolled back (n_used == 2 > 1)
+    a.free(b)
+
+
+# --------------------------------------------------------------------------- #
+# PrefixIndex
+# --------------------------------------------------------------------------- #
+def test_prefix_index_match_register_drop():
+    idx = PrefixIndex(4)
+    prompt = np.arange(12, dtype=np.int32)
+    idx.register(prompt, [7, 3, 9])
+    assert idx.match(prompt) == [7, 3, 9]
+    # only FULL pages participate: a 10-token prompt covers two pages
+    assert idx.match(prompt[:10]) == [7, 3]
+    # keys hash the ENTIRE prefix, not the page's own tokens: divergence
+    # inside page 1 kills pages 1 and 2 even though page 2's tokens match
+    other = prompt.copy()
+    other[5] = 99
+    assert idx.match(other) == [7]
+    # re-granting a page for writing drops its entry; the chain stops there
+    idx.drop_pages([3])
+    assert idx.match(prompt) == [7]
+    idx.register(prompt, [7, 5, 9])  # re-register the hole with a new page
+    assert idx.match(prompt) == [7, 5, 9]
+    idx.clear()
+    assert idx.match(prompt) == [] and len(idx) == 0
+
+
+def test_prefix_index_first_registration_wins():
+    idx = PrefixIndex(2)
+    prompt = np.arange(4, dtype=np.int32)
+    idx.register(prompt, [1, 2])
+    idx.register(prompt, [5, 6])  # duplicate content elsewhere: keep first
+    assert idx.match(prompt) == [1, 2]
+
+
 def test_scheduler_page_gated_admission_queues_fifo():
-    """Admission is gated on PAGES: a big head-of-queue request waits (strict
-    FIFO — never bypassed by a smaller one behind it), and its pages+slot are
-    reserved together or not at all."""
-    need = {"big": 3, "small": 1}
+    """Admission is gated on PAGES through the reserve hook: a big
+    head-of-queue request waits (strict FIFO — never bypassed by a smaller
+    one behind it), and its pages+slot are reserved together or not at
+    all.  ``None`` is the ONLY exhaustion signal; an empty grant admits."""
+    need = {"big": 3, "small": 1, "none": 0}
+    pages = PageAllocator(4)
     sched = Scheduler(
-        SlotAllocator(4), pages=PageAllocator(4), page_need=lambda r: need[r]
+        SlotAllocator(4),
+        reserve=lambda r: pages.alloc(need[r]),
+        release_grant=pages.free,
     )
     sched.enqueue("small")
     sched.enqueue("big")
@@ -116,12 +251,17 @@ def test_scheduler_page_gated_admission_queues_fifo():
     placed = sched.admit()
     # small (1 page) + big (3 pages) fill the pool; the second small queues
     assert [r for _, r in placed] == ["small", "big"]
-    assert sched.n_waiting == 1 and sched.pages.n_free == 0
+    assert sched.n_waiting == 1 and pages.n_free == 0
     assert sched.admit() == []  # page exhaustion queues rather than crashes
+    # an EMPTY grant is a real admission, not exhaustion: zero-page
+    # requests admit even with the pool full
+    sched.enqueue("none")
+    assert sched.n_waiting == 2
     sched.release(1)  # big finishes -> its WHOLE page set is reclaimed
-    assert sched.pages.n_free == 3
-    assert [r for _, r in sched.admit()] == ["small"]
+    assert pages.n_free == 3
+    assert [r for _, r in sched.admit()] == ["small", "none"]
     assert sched.slot_pages[1] == [1]  # lowest freed page, recycled
+    assert sched.slot_pages[2] == []  # the zero-page grant
 
 
 # --------------------------------------------------------------------------- #
@@ -232,7 +372,7 @@ def test_paged_engine_page_exhaustion_queues_and_drains(small_model):
     while eng.has_work:
         eng.step()
     assert all(len(r.tokens) == 3 for r in reqs)
-    assert eng.pages_in_use == 0 and eng.scheduler.pages.n_free == 3
+    assert eng.pages_in_use == 0 and eng.page_pool.n_free == 3
     assert eng.peak_active == 1
 
 
@@ -318,3 +458,263 @@ def test_paged_engine_memory_accounting(small_model):
         paged.step()
     assert paged.kv_bytes_in_use == 0 and paged.peak_pages_in_use == 2
     assert len(r.tokens) == 3
+
+
+# --------------------------------------------------------------------------- #
+# Zero-page paged archs (mamba state / SWA rings stay slot-resident)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch_id", ["mamba2-130m", "h2o-danube-1.8b"])
+def test_paged_engine_zero_page_request_full_lifecycle(arch_id):
+    """Archs with nothing paged (mamba conv/state, SWA rings) run the paged
+    engine with ``page_need == 0``: every admission reserves the EMPTY page
+    list — ``alloc(0) == []``, which must never be confused with the
+    ``None`` exhaustion signal.  Audit trail for that confusion: the
+    scheduler's admit loop breaks only on ``grant is None`` (an empty
+    grant admits), ``slot_pages`` holds the empty grant like any other,
+    and the engine's free path releases it without touching the allocator.
+    A 1-page pool (maximal page pressure for anyone who DID need pages)
+    must therefore never gate these archs: admission stays slot-gated and
+    the full admit -> decode -> free lifecycle completes."""
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+    from repro.serving import Engine, Request
+
+    cfg = get_arch(arch_id, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = Engine(
+        model, params, n_slots=2, max_len=16, page_size=4, kv_pages=1,
+        decode_block=1,
+    )
+    assert not eng._has_pages  # nothing paged for this family
+    reqs = [
+        eng.submit(
+            Request(
+                prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+                max_new_tokens=3,
+            )
+        )
+        for _ in range(3)
+    ]
+    eng.step()
+    # slot-gated (2 slots), never page-gated: zero-page grants always fit
+    assert eng.n_active == 2 and eng.n_waiting == 1
+    assert all(g.pages == [] for g in eng.scheduler.slot_pages.values())
+    assert eng.pages_in_use == 0 and eng.kv_bytes_in_use == eng._bytes_resident
+    while eng.has_work:
+        eng.step()
+    assert all(len(r.tokens) == 3 for r in reqs)
+    assert eng.pages_in_use == 0 and eng.peak_pages_in_use == 0
+    assert eng.scheduler.allocator.n_free == 2
+
+
+# --------------------------------------------------------------------------- #
+# Allocation-peak accounting (kv_bytes_peak honesty)
+# --------------------------------------------------------------------------- #
+def test_paged_engine_peak_observed_across_chunked_prefill(small_model):
+    """Regression (PR 5): peaks were engine-side state refreshed on the
+    admission path of step() and zeroed outright by reset_counters() — a
+    request mid-chunked-prefill at a warmup boundary kept its pages
+    allocated while ``peak_pages_in_use`` reported 0 until the NEXT
+    admission, under-reporting ``kv_bytes_peak``.  The allocator now owns
+    the high-water mark (raised at every allocation-changing site) and a
+    reset re-arms to CURRENT usage."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    eng = Engine(
+        model, params, n_slots=2, max_len=16, page_size=4, prefill_chunk=3,
+        decode_block=1,
+    )
+    r = eng.submit(Request(prompt=np.arange(10, dtype=np.int32), max_new_tokens=2))
+    eng.step()  # admission + FIRST chunk only: no decode ran, pages held
+    assert eng.prefill_chunks == 1 and eng.n_active == 1
+    assert eng.pages_in_use == 3  # ceil((10 + 2) / 4), reserved up front
+    assert eng.peak_pages_in_use == 3
+    eng.reset_counters()  # warmup boundary mid-prefill
+    assert eng.peak_pages_in_use == 3  # held allocation stays observed
+    assert eng.peak_active == 1
+    assert eng.kv_bytes_peak == eng._bytes_resident + 3 * eng._bytes_per_page
+    while eng.has_work:
+        eng.step()
+    assert len(r.tokens) == 2
+    assert eng.peak_pages_in_use == 3 and eng.pages_in_use == 0
+
+
+# --------------------------------------------------------------------------- #
+# Shared-prefix refcount lifecycle (engine level)
+# --------------------------------------------------------------------------- #
+def test_engine_shared_prefix_refcount_lifecycle(small_model):
+    """Shared pages are counted once while mapped by many slots, survive
+    the donor's release (the follower still reads them), return to the
+    free list only after the LAST reader releases, and remain matchable
+    as a warm cache afterwards — with emitted tokens identical to a fresh
+    unshared engine throughout."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(5)
+    sys = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)  # 2 full pages
+    pa = np.concatenate([sys, rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)])
+    pb = np.concatenate([sys, rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)])
+
+    # references from an unshared paged engine, run solo
+    refs = []
+    for p, s in ((pa, 4), (pb, 5)):
+        fresh = Engine(model, params, n_slots=1, max_len=16, page_size=4)
+        r = fresh.submit(Request(prompt=p, max_new_tokens=s))
+        while fresh.has_work:
+            fresh.step()
+        refs.append(r.tokens)
+
+    eng = Engine(
+        model, params, n_slots=2, max_len=16, page_size=4, kv_pages=8,
+        share_prefix=True, decode_block=1,
+    )
+    donor = eng.submit(Request(prompt=pa, max_new_tokens=4))  # needs 4 pages
+    eng.step()  # donor prefilled + registered
+    assert eng.pages_in_use == 4
+    follower = eng.submit(Request(prompt=pb, max_new_tokens=5))  # needs 4
+    eng.step()
+    # follower mapped the 2 sys pages read-only, allocated only 2 fresh:
+    # 6 distinct pages — not 8 — back 8 pages of logical table entries
+    assert eng.shared_page_hits == 2 and eng.shared_admissions == 1
+    assert eng.pages_in_use == 6
+    shared = [g for g in eng.scheduler.slot_pages.values() if g.n_shared == 2]
+    assert len(shared) == 1
+    for p in shared[0].pages[:2]:
+        assert eng.page_pool.refcount(p) == 2  # donor + follower
+    while not donor.done:
+        eng.step()
+    # donor finished (smaller budget) but the shared pages are NOT
+    # recycled: the follower still reads them
+    assert donor.done and not follower.done
+    for p in shared[0].pages[:2]:
+        assert eng.page_pool.refcount(p) == 1
+    assert eng.pages_in_use == 4  # 2 shared + follower's 2 private
+    while eng.has_work:
+        eng.step()
+    assert eng.pages_in_use == 0 and eng.page_pool.n_free == 8
+    assert donor.tokens == refs[0] and follower.tokens == refs[1]
+
+    # warm cache: the freed pages still match until a writer re-grants them
+    late = eng.submit(Request(prompt=pb, max_new_tokens=5))
+    while eng.has_work:
+        eng.step()
+    assert eng.shared_admissions == 2  # matched CACHED pages (revived)
+    assert late.tokens == refs[1]
+
+
+def test_engine_shared_reserve_rollback_is_atomic(small_model):
+    """A queued request that MATCHES prefix pages but cannot fit its tail
+    rolls back every acquired reference (the donor's refcounts return to
+    1) and queues; once the donor releases, the retry admits off the warm
+    cache and the tokens still match the unshared reference."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(11)
+    sys = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    pa = np.concatenate([sys, rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)])
+    pb = np.concatenate([sys, rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)])
+    ref = Engine(model, params, n_slots=1, max_len=16, page_size=4)
+    r = ref.submit(Request(prompt=pb, max_new_tokens=5))
+    while ref.has_work:
+        ref.step()
+
+    # pool of 4: the donor (4 pages) fills it; the follower matches the 2
+    # sys pages but its 2-page tail cannot fit -> the reservation fails
+    # and must roll back BOTH acquired references atomically
+    eng = Engine(
+        model, params, n_slots=2, max_len=16, page_size=4, kv_pages=4,
+        share_prefix=True, decode_block=1,
+    )
+    donor = eng.submit(Request(prompt=pa, max_new_tokens=4))  # needs 4
+    eng.step()  # donor prefilled + registered (4 pages live)
+    donor_pages = list(eng.scheduler.slot_pages[0].pages)
+    follower = eng.submit(Request(prompt=pb, max_new_tokens=5))  # needs 4
+    eng.step()  # follower's reservation fails this step (0 pages free)
+    assert eng.n_waiting == 1 and not donor.done
+    # the failed match took one ref on each sys page and gave both back
+    assert all(eng.page_pool.refcount(p) == 1 for p in donor_pages)
+    assert eng.pages_in_use == 4 and eng.peak_pages_in_use == 4
+    while eng.has_work:
+        eng.step()
+    assert follower.tokens == r.tokens
+    assert eng.shared_admissions == 1  # the retry matched the warm cache
+    assert eng.pages_in_use == 0
+
+
+def test_engine_shared_cow_degrades_when_fork_page_cannot_fit(small_model):
+    """Livelock regression: the COW fork wants one page BEYOND the
+    request's declared footprint, but ``submit`` only guarantees
+    ``need <= kv_pages`` — a fully-covered prompt whose need equals the
+    whole pool would retry the identical failing reservation forever.
+    The reservation must instead degrade (un-share the boundary page and
+    prefill it) and admit at exactly ``need`` pages."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)  # 2 pages
+    eng = Engine(
+        model, params, n_slots=2, max_len=12, page_size=4, kv_pages=3,
+        share_prefix=True, decode_block=1,
+    )
+    first = eng.submit(Request(prompt=prompt, max_new_tokens=4))  # need == 3 == pool
+    while eng.has_work:
+        eng.step()
+    # identical prompt, fully covered by the cached pages: a fork would
+    # need 4 pages; the degraded reservation shares page 0, re-prefills
+    # page 1, and must terminate
+    again = eng.submit(Request(prompt=prompt, max_new_tokens=4))
+    for _ in range(64):
+        if not eng.has_work:
+            break
+        eng.step()
+    assert again.done, "fully-covered prompt livelocked at need == kv_pages"
+    assert again.tokens == first.tokens
+    assert eng.cow_forks == 0 and eng.shared_admissions == 1
+    assert eng.shared_page_hits == 1  # page 0 shared; boundary page re-prefilled
+    assert eng.pages_in_use == 0
+
+
+def test_engine_degraded_reservation_failure_restores_peak(small_model):
+    """Regression: when the COW degrade pops the ONLY acquired page and
+    the retry alloc still fails, the failure branch must still restore
+    the high-water mark the revive raised — otherwise the head-of-queue
+    retry reports a phantom page peak every step."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(17)
+    px = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)  # 1 full page
+    eng = Engine(
+        model, params, n_slots=3, max_len=12, page_size=4, kv_pages=4,
+        share_prefix=True, decode_block=1,
+    )
+    # blocker takes pages 0-1 and stays live; the donor takes 2-3,
+    # finishes fast, and leaves px's page cached + indexed at page 2
+    blocker = eng.submit(
+        Request(prompt=rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32),
+                max_new_tokens=5)  # ceil((3 + 5) / 4) = 2 pages, stays live
+    )
+    eng.step()
+    donor = eng.submit(Request(prompt=px, max_new_tokens=2))
+    while not donor.done:
+        eng.step()
+    assert not blocker.done and eng.pages_in_use == 2
+    eng.page_pool.reset_peak()
+    assert eng.peak_pages_in_use == 2
+    # fully-covered follower, need 3: fork wants 3 fresh (1 free after the
+    # revive), the degrade retry wants 3 fresh (2 free) — both fail, and
+    # the revived page must NOT linger in the peak
+    follower = eng.submit(Request(prompt=px, max_new_tokens=8))
+    eng.step()
+    assert not follower.done and eng.n_waiting == 1
+    assert eng.pages_in_use == 2
+    assert eng.peak_pages_in_use == 2  # no phantom page from the revive
+    while eng.has_work:
+        eng.step()
+    assert follower.done and eng.pages_in_use == 0
