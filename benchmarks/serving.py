@@ -36,6 +36,17 @@ prefix pages counted once), strictly more peak-admitted concurrency
 (page-gated admission banks the savings), throughput within tolerance,
 and bit-identical greedy tokens per request.
 
+``--trace sessions`` replays MULTI-TURN conversations (each turn's prompt
+is the whole conversation so far plus new user tokens; per-tenant shared
+system prompts) TWICE on the paged engine — prefix sharing off, then on
+(``+shared`` row) — and gates the same-run session-cache contract:
+follow-up turns re-prefill strictly fewer prompt tokens and see strictly
+lower TTFT (decode-filled pages registered at slot release are matched
+read-only), greedy tokens are bit-identical, and pages stay within the
+pool under the ``--warm-cache-pages`` LRU eviction budget.  New columns:
+re-prefilled / skipped prompt tokens, follow-up TTFT, evictions, cached
+pages.
+
 ``--json BENCH_serving.json`` additionally writes the trace rows as a JSON
 result document, and ``--check-baseline benchmarks/baselines/
 BENCH_serving.json --tolerance 0.5`` compares tok/s and utilization against
@@ -425,16 +436,300 @@ def run_trace(
     return rows
 
 
+def run_sessions_trace(
+    archs=("llama3.2-1b",),
+    *,
+    n_sessions: int = 4,
+    turns_range=(3, 5),
+    user_range=(3, 6),
+    gen_range=(3, 6),
+    sys_prompt_len: int = 8,
+    rate: float = 8.0,
+    think_time: float = 0.01,
+    n_slots: int = 4,
+    seed: int = 0,
+    alpha: float = 0.0,
+    q: int = 4,
+    decode_block: int = 8,
+    page_size: int = 4,
+    kv_pages: int = 0,
+    prefill_chunk: int = 8,
+    warm_cache_pages: int = 0,
+    share_prefix: bool = False,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    warmup: bool = True,
+    row_suffix: str = "",
+):
+    """Replay MULTI-TURN conversations through the continuous engine.
+
+    Each session is ``turns_range`` chat turns: turn t's prompt is the
+    ENTIRE conversation so far (per-tenant system prompt, then every
+    earlier user turn and model reply) plus ``user_range`` new user
+    tokens — so follow-up prompts strictly extend the previous turn's
+    prompt + reply, which is exactly the traffic shape session-cache
+    registration (decode-filled pages indexed at slot release) exists
+    for.  Sessions arrive Poisson at ``rate``/s; a follow-up turn is
+    submitted ``think_time`` seconds after its reply lands.  Half the
+    sessions share each tenant's system prompt (``n_sessions // 2``
+    tenants), so cross-session prefix sharing engages too.
+
+    Because each turn's prompt embeds the previous reply, the trace
+    cannot be pre-built — the drive loop below submits turns online as
+    replies complete.  With greedy sampling the replies (and therefore
+    the full trace) are IDENTICAL whether sharing is on or off, which is
+    what makes the same-run gate (:func:`check_sessions_rows`) able to
+    demand bit-identical tokens between the two rows.
+
+    Row columns beyond the Poisson trace's: ``reprefill_tok`` (prompt
+    tokens follow-up turns actually re-prefilled — the number session
+    caching exists to shrink), ``skipped_tok`` (prompt tokens skipped
+    because their K/V was already resident), ``followup_ttft_ms`` (mean
+    TTFT over turns >= 2), ``evictions`` and ``cached_pages`` (the
+    allocator's warm-cache policy at work).
+
+    ``prefill_chunk`` should stay BELOW ``sys_prompt_len + user_range[0]``
+    so every prompt routes through the single fixed-shape chunk program —
+    that bounds compiles to one prefill program no matter how long the
+    conversations grow.
+    """
+    from repro.serving import Engine, Request, SamplingParams
+    from repro.serving.engine import percentile
+
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        if alpha > 0:
+            params, _, _ = compress_tree(
+                params, CompressionPolicy(alpha=alpha, q=q, min_dim=32), jax.random.PRNGKey(1)
+            )
+        # trace material is drawn ONCE per row from the same seed path, so
+        # paired rows (sharing off/on) replay identical traffic: session
+        # arrivals, per-turn user tokens and reply budgets, tenant prompts
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_sessions)).tolist()
+        n_turns = [int(rng.integers(turns_range[0], turns_range[1] + 1))
+                   for _ in range(n_sessions)]
+        user_toks = [
+            [rng.integers(0, cfg.vocab,
+                          size=(int(rng.integers(user_range[0], user_range[1] + 1)),)
+                          ).astype(np.int32) for _ in range(n_turns[s])]
+            for s in range(n_sessions)
+        ]
+        gen_lens = [
+            [int(rng.integers(gen_range[0], gen_range[1] + 1))
+             for _ in range(n_turns[s])]
+            for s in range(n_sessions)
+        ]
+        n_tenants = max(1, n_sessions // 2)
+        tenant_sys = [
+            rng.integers(0, cfg.vocab, size=(sys_prompt_len,)).astype(np.int32)
+            for _ in range(n_tenants)
+        ]
+        # the longest conversation bounds max_len (prompt + reply of its
+        # final turn = the whole session transcript)
+        max_len = max(
+            sys_prompt_len
+            + sum(u.size for u in user_toks[s]) + sum(gen_lens[s])
+            for s in range(n_sessions)
+        )
+        max_pages = -(-max_len // page_size)
+        eff_kv_pages = kv_pages or n_slots * max_pages
+        eng = Engine(
+            model, params, n_slots=n_slots, max_len=max_len,
+            decode_block=decode_block, page_size=page_size,
+            kv_pages=eff_kv_pages,
+            prefill_chunk=prefill_chunk or None,
+            share_prefix=share_prefix,
+            warm_cache_pages=warm_cache_pages or None,
+        )
+        supported = bool(getattr(eng, "_share", share_prefix)) if share_prefix else (
+            eng.model.prefill_chunk is not None and eng._has_pages
+        )
+        if warmup:
+            # every prompt is longer than the chunk (see docstring), so ONE
+            # long chunked prompt compiles the only prefill program; the
+            # shared pair + page-boundary pair compile the shared-tail
+            # entry and the COW fork copy (run_trace's warmup idiom)
+            wrng = np.random.default_rng(seed + 1)
+            wsp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed)
+            eng.run([Request(
+                prompt=wrng.integers(0, cfg.vocab, size=(max_len - 4,)).astype(np.int32),
+                max_new_tokens=2, sampling=wsp,
+            )])
+            if share_prefix and getattr(eng, "_share", False):
+                eng.reset_prefix_cache()
+                wsys = wrng.integers(0, cfg.vocab, size=(sys_prompt_len + 4,)).astype(np.int32)
+                for extra in (2, 3):
+                    tail = wrng.integers(0, cfg.vocab, size=(extra,)).astype(np.int32)
+                    eng.run([Request(prompt=np.concatenate([wsys, tail]),
+                                     max_new_tokens=2, sampling=wsp)])
+                blen = -(-(sys_prompt_len + 5) // page_size) * page_size
+                bprompt = wrng.integers(0, cfg.vocab, size=(blen,)).astype(np.int32)
+                for _ in range(2):  # second run fully matches -> COW program
+                    eng.run([Request(prompt=bprompt.copy(), max_new_tokens=2,
+                                     sampling=wsp)])
+            eng.reset_prefix_cache()
+            eng.reset_counters()
+
+        # ---- online drive loop: turn t+1's prompt embeds turn t's reply
+        ready_at = list(arrivals)  # next submit time per session (None = done)
+        turn = [0] * n_sessions
+        ctx = [tenant_sys[s % n_tenants].copy() for s in range(n_sessions)]
+        in_flight: dict = {}  # uid -> session
+        finished: list = [[None] * n_turns[s] for s in range(n_sessions)]
+        t0 = time.perf_counter()
+        while any(r is not None for r in ready_at) or eng.has_work:
+            now = time.perf_counter() - t0
+            for s in range(n_sessions):
+                if ready_at[s] is not None and ready_at[s] <= now and s not in in_flight.values():
+                    prompt = np.concatenate([ctx[s], user_toks[s][turn[s]]])
+                    req = Request(
+                        prompt=prompt,
+                        max_new_tokens=gen_lens[s][turn[s]],
+                        sampling=SamplingParams(
+                            temperature=temperature, top_k=top_k,
+                            seed=seed + 131 * s + turn[s],
+                        ),
+                    )
+                    eng.submit(req)
+                    in_flight[req.uid] = s
+                    ready_at[s] = None  # waiting on the reply
+            if eng.has_work:
+                for r in eng.step():
+                    s = in_flight.pop(r.uid)
+                    finished[s][turn[s]] = r
+                    ctx[s] = np.concatenate([r.prompt, np.asarray(r.tokens, np.int32)])
+                    turn[s] += 1
+                    if turn[s] < n_turns[s]:
+                        ready_at[s] = (time.perf_counter() - t0) + think_time
+                continue
+            nxt = min((t for t in ready_at if t is not None), default=None)
+            if nxt is not None:
+                wait = nxt - (time.perf_counter() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+        dt = time.perf_counter() - t0
+        done = [r for per in finished for r in per]
+        assert all(r is not None for r in done)
+        followups = [r for s in range(n_sessions) for r in finished[s][1:]]
+        n_tok = sum(len(r.tokens) for r in done)
+        lats = sorted(r.latency for r in done)
+        ttfts = sorted(r.ttft for r in followups)
+        row = dict(
+            name=f"sessions={arch}{row_suffix}",
+            arch=f"{arch}{row_suffix}",
+            seconds=dt,
+            tok_s=n_tok / dt,
+            p50_ms=percentile(lats, 0.5) * 1e3,
+            p95_ms=percentile(lats, 0.95) * 1e3,
+            ttft_ms=float(np.mean([r.ttft for r in done])) * 1e3,
+            followup_ttft_ms=float(np.mean(ttfts)) * 1e3 if ttfts else 0.0,
+            # prompt tokens follow-up turns actually RE-PREFILLED: their
+            # whole context minus what matched resident pages
+            reprefill_tok=sum(r.prompt.size - r.prefill_skipped for r in followups),
+            skipped_tok=eng.skipped_prefill_tokens,
+            evictions=eng.prefix_evictions,
+            cached_pages=eng.prefix_cached_pages,
+            n_requests=len(done),
+            n_sessions=n_sessions,
+            decode_steps=eng.steps,
+            host_syncs=eng.host_syncs,
+            tok_per_sync=eng.tokens_per_sync,
+            util=eng.batch_utilization,
+            peak_active=eng.peak_active,
+            kv_bytes_cap=eng.kv_bytes_capacity,
+            kv_bytes_peak=eng.kv_bytes_peak,
+            pages_peak=eng.peak_pages_in_use,
+            kv_pages=eff_kv_pages if eng.paged else 0,
+            prefill_chunks=eng.prefill_chunks,
+            shared_hits=eng.shared_page_hits,
+            cow_forks=eng.cow_forks,
+            share_supported=int(supported),
+        )
+        if temperature == 0.0:
+            # (session, turn)-ordered emitted tokens: the same-run parity
+            # gate currency (underscore keys never reach CSV/JSON)
+            row["_tokens"] = [list(r.tokens) for r in done]
+        rows.append(row)
+    return rows
+
+
+def check_sessions_rows(rows, *, tolerance: float = 0.3) -> int:
+    """Same-run sharing-off-vs-on gates for the sessions trace.
+
+    Pairs ``X`` with ``X+shared``; both replayed the IDENTICAL multi-turn
+    trace (greedy replies make the traffic deterministic).  Deterministic
+    counters gate with NO slack: follow-up turns must re-prefill strictly
+    FEWER prompt tokens (decode-filled pages matched read-only), sharing
+    must have skipped something, pages_peak must respect the pool, and
+    greedy tokens must be bit-identical (sharing relocates bytes, never
+    changes what is attended).  Follow-up TTFT — a timing number, but the
+    one the mechanism exists to cut, and on the same machine the
+    avoided re-prefill work dwarfs scheduler noise — must be strictly
+    lower.  Throughput holds within ``tolerance``.  Returns #violations.
+    """
+    by_arch = {r["arch"]: r for r in rows if "arch" in r}
+    failures = 0
+    for arch, shared in by_arch.items():
+        if not arch.endswith("+shared"):
+            continue
+        base = by_arch.get(arch[: -len("+shared")])
+        if base is None:
+            continue
+        label = arch[: -len("+shared")]
+        if not shared.get("share_supported"):
+            print(
+                f"[perf-smoke] {label} sessions shared-vs-unshared: "
+                f"sharing inert for this arch, gates skipped"
+            )
+            continue
+        checks = [
+            ("reprefill_tok", shared["reprefill_tok"] < base["reprefill_tok"],
+             f"{shared['reprefill_tok']} < {base['reprefill_tok']}"),
+            ("skipped_tok", shared["skipped_tok"] > 0,
+             f"{shared['skipped_tok']} > 0"),
+            ("followup_ttft_ms",
+             shared["followup_ttft_ms"] < base["followup_ttft_ms"],
+             f"{shared['followup_ttft_ms']:.1f} < {base['followup_ttft_ms']:.1f}"),
+            ("pages_peak", shared["pages_peak"] <= shared["kv_pages"],
+             f"{shared['pages_peak']} <= {shared['kv_pages']}"),
+            ("tok_s", shared["tok_s"] >= base["tok_s"] * (1.0 - tolerance),
+             f"{shared['tok_s']:.1f} >= {base['tok_s']:.1f} - {tolerance:.0%}"),
+        ]
+        if base.get("_tokens") is not None and shared.get("_tokens") is not None:
+            checks.append(
+                ("greedy_parity", shared["_tokens"] == base["_tokens"],
+                 "bit-identical tokens per (session, turn)")
+            )
+        for metric, ok, detail in checks:
+            print(
+                f"[perf-smoke] {label} sessions {metric}: {detail} "
+                f"{'OK' if ok else 'VIOLATION'}"
+            )
+            failures += 0 if ok else 1
+    return failures
+
+
 def write_json(rows, json_path, *, config=None):
     """Write trace rows as the BENCH_serving.json result document."""
     keys = (
         "tok_s", "p50_ms", "p95_ms", "ttft_ms", "ttft_p95_short_ms",
+        "followup_ttft_ms", "reprefill_tok", "skipped_tok", "evictions",
+        "cached_pages", "n_sessions", "kv_pages",
         "n_requests", "decode_steps", "host_syncs", "tok_per_sync", "util",
         "peak_active", "kv_bytes_cap", "kv_bytes_peak", "pages_peak",
         "prefill_chunks", "shared_hits", "cow_forks", "share_supported",
     )
+    kind = (
+        "sessions_trace"
+        if any("reprefill_tok" in r for r in rows)
+        else "poisson_trace"
+    )
     doc = {
-        "kind": "poisson_trace",
+        "kind": kind,
         "config": config or {},
         "rows": {
             r["arch"]: {k: r[k] for k in keys if k in r}
@@ -605,6 +900,14 @@ def emit_csv(rows, csv_path=None):
             extra = ""
             if "ttft_p95_short_ms" in r:
                 extra = f";ttft_p95_short_ms={r['ttft_p95_short_ms']:.0f}"
+            if "reprefill_tok" in r:  # sessions-trace columns
+                extra += (
+                    f";followup_ttft_ms={r['followup_ttft_ms']:.0f}"
+                    f";reprefill_tok={r['reprefill_tok']}"
+                    f";skipped_tok={r['skipped_tok']}"
+                    f";evictions={r['evictions']}"
+                    f";cached_pages={r['cached_pages']}"
+                )
             lines.append(
                 f"serving/{r['name']},{r['seconds']*1e6:.0f},"
                 f"tok_s={r['tok_s']:.1f};p50_ms={r['p50_ms']:.0f};"
@@ -649,9 +952,12 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--trace",
-        choices=["poisson"],
+        choices=["poisson", "sessions"],
         default=None,
-        help="replay an arrival trace through the continuous-batching engine",
+        help="replay an arrival trace through the continuous-batching "
+        "engine: 'poisson' = independent requests; 'sessions' = "
+        "multi-turn conversations replayed TWICE (prefix sharing off, "
+        "then on) with the same-run session-cache gate",
     )
     ap.add_argument("--arch", default="llama3.2-1b",
                     help="comma-separated reduced arch ids (trace mode)")
@@ -685,6 +991,17 @@ if __name__ == "__main__":
     ap.add_argument("--sys-prompt-len", type=int, default=12,
                     help="common system-prompt tokens for --shared-prefix "
                     "(keep >= 2 pages so full-page matching engages)")
+    ap.add_argument("--n-sessions", type=int, default=4,
+                    help="conversations in the sessions trace")
+    ap.add_argument("--turns-range", default="3,5",
+                    help="min,max chat turns per session (inclusive)")
+    ap.add_argument("--user-range", default="3,6",
+                    help="min,max new user tokens per turn (inclusive)")
+    ap.add_argument("--think-ms", type=float, default=10.0,
+                    help="delay between a reply and its follow-up turn")
+    ap.add_argument("--warm-cache-pages", type=int, default=0,
+                    help="LRU budget on matchable refcount-0 pages "
+                    "(sessions trace, shared row); 0 = unbounded")
     ap.add_argument("--compare-paged", action="store_true",
                     help="run each arch TWICE at equal KV bytes: the flat "
                     "slot pool, then a paged pool (+paged row) with twice "
@@ -794,14 +1111,50 @@ if __name__ == "__main__":
                 prefill_chunk=args.prefill_chunk,
                 **common,
             )
+    elif args.trace == "sessions":
+        # one invocation = TWO rows over the identical multi-turn trace —
+        # prefix sharing off, then on (+shared) — gated against each other
+        page = args.page_size or 4
+        chunk = args.prefill_chunk or 2 * page
+        eff = dict(page_size=page, prefill_chunk=chunk,
+                   sys_prompt_len=args.sys_prompt_len,
+                   n_sessions=args.n_sessions, turns_range=args.turns_range,
+                   user_range=args.user_range,
+                   warm_cache_pages=args.warm_cache_pages)
+        arch_list = tuple(a.strip() for a in args.arch.split(",") if a.strip())
+        sess_kw = dict(
+            n_sessions=args.n_sessions,
+            turns_range=tuple(int(x) for x in args.turns_range.split(",")),
+            user_range=tuple(int(x) for x in args.user_range.split(",")),
+            gen_range=tuple(int(x) for x in args.gen_range.split(",")),
+            sys_prompt_len=args.sys_prompt_len,
+            rate=args.rate,
+            think_time=args.think_ms / 1e3,
+            n_slots=args.n_slots,
+            seed=args.seed,
+            alpha=args.alpha,
+            decode_block=args.decode_block,
+            page_size=page,
+            kv_pages=args.kv_pages,
+            prefill_chunk=chunk,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            warmup=not args.no_warmup,
+        )
+        rows = run_sessions_trace(arch_list, row_suffix="+turns", **sess_kw)
+        rows += run_sessions_trace(
+            arch_list, share_prefix=True,
+            warm_cache_pages=args.warm_cache_pages,
+            row_suffix="+turns+shared", **sess_kw,
+        )
     elif args.sweep_backends:
         rows = run_backend_sweep()
     else:
         rows = run()
     emit_csv(rows, csv_path=args.csv)
     if args.json:
-        if args.trace != "poisson":
-            raise SystemExit("--json applies to --trace poisson rows")
+        if args.trace is None:
+            raise SystemExit("--json applies to --trace rows")
         write_json(
             rows,
             args.json,
@@ -832,3 +1185,9 @@ if __name__ == "__main__":
         n_bad = check_shared_rows(rows, tolerance=args.tolerance / 2)
         if n_bad:
             sys.exit(f"[perf-smoke] {n_bad} shared-prefix gate(s) violated")
+    if args.trace == "sessions":
+        # likewise same-run: sharing off vs on over the identical
+        # multi-turn conversations
+        n_bad = check_sessions_rows(rows, tolerance=args.tolerance / 2)
+        if n_bad:
+            sys.exit(f"[perf-smoke] {n_bad} sessions gate(s) violated")

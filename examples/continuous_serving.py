@@ -22,7 +22,11 @@ What it shows:
     same leading prompt pages, which are prefilled once, mapped read-only
     into each follower's block table (counted once in the page
     accounting), and recycled only after their last reader finishes —
-    same tokens again, and strictly fewer pages than the unshared run.
+    same tokens again, and strictly fewer pages than the unshared run;
+  * with ``--sessions``: the SESSION CACHE — a 3-turn conversation whose
+    every follow-up prompt extends the previous reply, matching the pages
+    the previous turn's decode filled (registered at slot release, LRU
+    warm cache) so each turn re-prefills only its new user tokens.
 """
 
 import argparse
@@ -52,7 +56,14 @@ def main():
     ap.add_argument("--shared", action="store_true",
                     help="system-prompt traffic over the paged pool with "
                     "copy-on-write prefix sharing (implies --paged)")
+    ap.add_argument("--sessions", action="store_true",
+                    help="after the shared run, drive a 3-turn conversation "
+                    "through the warm session cache: each follow-up prompt "
+                    "extends the previous reply and skips its re-prefill "
+                    "(implies --shared)")
     args = ap.parse_args()
+    if args.sessions:
+        args.shared = True
     if args.shared:
         args.paged = True
 
@@ -146,6 +157,25 @@ def main():
     )[0].tolist()
     assert g.tokens == ref, (g.tokens, ref)
     print(f"[parity] request {g.uid} matches greedy_generate exactly: OK")
+
+    if args.sessions:
+        # a 3-turn conversation on the WARM engine: turn t+1's prompt is
+        # turn t's prompt + reply + new user tokens, so it matches the
+        # pages turn t's decode filled and prefills only the new suffix
+        print("[sessions] 3-turn conversation through the warm session cache:")
+        ctx = np.concatenate([sys_prompt, rng.integers(0, cfg.vocab, size=(5,))])
+        for turn in range(3):
+            r = eng.run([Request(prompt=ctx.copy(), max_new_tokens=8)])[0]
+            print(
+                f"  turn {turn}: prompt {ctx.size:2d} tokens, re-prefilled "
+                f"{ctx.size - r.prefill_skipped:2d} (skipped "
+                f"{r.prefill_skipped:2d} via matched pages), "
+                f"ttft {r.ttft*1e3:4.0f}ms -> reply {r.tokens}"
+            )
+            ctx = np.concatenate(
+                [ctx, np.asarray(r.tokens, np.int64),
+                 rng.integers(0, cfg.vocab, size=(4,))]
+            )
 
 
 if __name__ == "__main__":

@@ -64,6 +64,10 @@ def main(argv=None):
                     "pages map them read-only and prefill only the "
                     "unshared tail (requires --page-size; inert for "
                     "families without mid-prompt prefill)")
+    ap.add_argument("--warm-cache-pages", type=int, default=0,
+                    help="cap on refcount-0 pages kept matchable in the "
+                    "prefix index (LRU eviction); 0 = unbounded "
+                    "(requires --page-size)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -135,7 +139,8 @@ def main(argv=None):
                      page_size=args.page_size or None,
                      kv_pages=args.kv_pages or None,
                      prefill_chunk=args.prefill_chunk or None,
-                     share_prefix=args.share_prefix)
+                     share_prefix=args.share_prefix,
+                     warm_cache_pages=args.warm_cache_pages or None)
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -153,12 +158,19 @@ def main(argv=None):
         done = eng.run(reqs)
         dt = time.time() - t0
         n_tok = sum(len(r.tokens) for r in done)
-        lats = sorted(r.latency for r in done)
-        p50, p95 = percentile(lats, 0.5), percentile(lats, 0.95)
         print(f"[continuous] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.1f} tok/s, slots={n_slots}, params {n0/1e6:.1f}M, "
               f"kernels={dcfg.backend})")
-        print(f"latency p50={p50*1e3:.0f}ms p95={p95*1e3:.0f}ms "
+        # a replay that completed ZERO requests has no percentiles —
+        # report n/a instead of crashing on percentile([], ...)
+        lats = sorted(r.latency for r in done)
+        lat_s = (
+            f"p50={percentile(lats, 0.5)*1e3:.0f}ms "
+            f"p95={percentile(lats, 0.95)*1e3:.0f}ms"
+            if lats
+            else "p50=n/a p95=n/a (0 completed)"
+        )
+        print(f"latency {lat_s} "
               f"decode_steps={eng.steps} host_syncs={eng.host_syncs} "
               f"tok_per_sync={eng.tokens_per_sync:.1f} "
               f"util={eng.batch_utilization:.3f}")
@@ -171,9 +183,15 @@ def main(argv=None):
             if args.share_prefix:
                 print(f"[shared] shared_pages={eng.shared_page_hits} "
                       f"cow_forks={eng.cow_forks} "
-                      f"matched_admissions={eng.shared_admissions}")
-        out = np.asarray([done[0].tokens], np.int32)
-        print("first sequence:", done[0].tokens[:12])
+                      f"matched_admissions={eng.shared_admissions} "
+                      f"prefill_tok_skipped={eng.skipped_prefill_tokens} "
+                      f"cached_pages={eng.prefix_cached_pages} "
+                      f"evictions={eng.prefix_evictions}")
+        if done:
+            out = np.asarray([done[0].tokens], np.int32)
+            print("first sequence:", done[0].tokens[:12])
+        else:
+            out = np.zeros((0, 0), np.int32)
 
     print("[dispatch] per-site kernel paths:")
     print(dispatch.format_counters())

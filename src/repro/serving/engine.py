@@ -130,6 +130,7 @@ class Request:
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    prefill_skipped: int = 0  # prompt tokens covered by shared prefix pages
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -143,11 +144,23 @@ class Request:
         return len(self.tokens) >= self.max_new_tokens
 
     @property
-    def latency(self) -> float:
+    def latency(self) -> Optional[float]:
+        """Submit-to-completion seconds, or ``None`` before completion.
+
+        The timestamps default to 0.0, so subtracting them blindly would
+        yield a huge NEGATIVE number (−t_submit) for an in-flight request
+        — garbage that sorts, averages and compares without error.  The
+        ``None`` forces callers to handle incomplete requests explicitly.
+        """
+        if self.t_done == 0.0 or self.t_submit == 0.0:
+            return None
         return self.t_done - self.t_submit
 
     @property
-    def ttft(self) -> float:
+    def ttft(self) -> Optional[float]:
+        """Submit-to-first-token seconds, or ``None`` before the first emit."""
+        if self.t_first == 0.0 or self.t_submit == 0.0:
+            return None
         return self.t_first - self.t_submit
 
     def _salt(self, token_index: int) -> int:
@@ -280,6 +293,21 @@ class Engine:
     requests.  Inert (no behavior change) for families whose prefill
     cannot enter mid-prompt (ssm/hybrid/swa/vlm/audio).  See the module
     docstring for the matching / copy-on-write contract.
+
+    SESSION reuse: when a shared-prefix slot finishes, its DECODE-FILLED
+    full pages are registered too, keyed by the chained digest of prompt
+    + generated tokens (minus the final token, whose K/V the fused loop
+    does not guarantee to have written) — so a follow-up turn whose
+    prompt extends the previous reply matches deep into the conversation
+    and prefills only its new suffix.  Before registration the generated
+    span is REMATERIALIZED through the chunk-prefill program (logits
+    discarded): decode's single-query kernel and the prefill program
+    round differently in the last bits, and indexed pages must hold
+    bitwise the bytes a cold re-prefill would produce or a follow-up
+    matching them can flip a greedy argmax vs an unshared run.
+    ``warm_cache_pages`` caps how many refcount-0 pages stay matchable
+    (LRU eviction inside the allocator); None keeps every released page
+    matchable until a writer needs it.
     """
 
     def __init__(
@@ -296,6 +324,7 @@ class Engine:
         kv_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         share_prefix: bool = False,
+        warm_cache_pages: Optional[int] = None,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
@@ -316,7 +345,10 @@ class Engine:
         self.prefill_chunk = prefill_chunk
         if share_prefix and not self.paged:
             raise ValueError("share_prefix requires page_size (paged mode)")
+        if warm_cache_pages is not None and not self.paged:
+            raise ValueError("warm_cache_pages requires page_size (paged mode)")
         self.share_prefix = share_prefix
+        self.warm_cache_pages = warm_cache_pages
         if self.paged:
             if page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {page_size}")
@@ -347,7 +379,14 @@ class Engine:
                 if prefill_chunk is not None
                 else (page_size if self._share else None)
             )
-            self.page_pool = PageAllocator(self.kv_pages)
+            # the allocator owns warm-cache lifetime: its on_evict callback
+            # is the ONLY place index keys are dropped outside an explicit
+            # reset, so keys and storage can never disagree
+            self.page_pool = PageAllocator(
+                self.kv_pages,
+                cache_budget=warm_cache_pages,
+                on_evict=self._on_evict,
+            )
             self.scheduler = Scheduler(
                 SlotAllocator(n_slots),
                 reserve=self._reserve,
@@ -417,6 +456,9 @@ class Engine:
         self.shared_page_hits = 0
         self.cow_forks = 0
         self.shared_admissions = 0
+        # prompt tokens admissions did NOT have to re-prefill because the
+        # matched prefix's K/V was already resident (sum of grant.start)
+        self.skipped_prefill_tokens = 0
 
     # ------------------------------------------------------------------ #
     # submission / introspection
@@ -484,10 +526,9 @@ class Engine:
             # when nothing was revived.
             self.page_pool.rollback_peak(peak0)
             return None
-        if self._prefix is not None and fresh:
-            # fresh pages are about to be WRITTEN: any cached prefix entry
-            # still pointing at them is dead
-            self._prefix.drop_pages(fresh)
+        # fresh pages are about to be WRITTEN, but no index scrub is needed
+        # here: the allocator only grants an index-backed page through its
+        # eviction path, which already dropped the keys via _on_evict
         if fork:
             grant = PageGrant(
                 pages=acquired[:-1] + [fresh[0]] + fresh[1:],
@@ -501,13 +542,23 @@ class Engine:
         if k:
             self.shared_admissions += 1
             self.shared_page_hits += grant.n_shared
+            self.skipped_prefill_tokens += grant.start
+            request.prefill_skipped = grant.start
         return grant
+
+    def _on_evict(self, pages: List[int]) -> None:
+        """PageAllocator eviction callback: a cached page is being handed
+        to a writer (or swept by the cache budget), so its index keys must
+        die in the same operation — no stale ``match`` hits."""
+        if self._prefix is not None:
+            self._prefix.drop_pages(pages)
 
     def _release_grant(self, grant: PageGrant) -> None:
         """Drop one reference on every page the grant holds (Scheduler
         hook).  Shared pages survive until their LAST reader releases;
-        pages hitting refcount 0 return to the free list but stay in the
-        prefix index (a warm cache) until re-granted for writing."""
+        an index-backed page hitting refcount 0 becomes a warm-cache
+        entry inside the allocator (LRU-ordered, evicted via _on_evict
+        when re-granted for writing or swept by the cache budget)."""
         if grant.refs:
             self.page_pool.free(grant.refs)
 
@@ -516,9 +567,12 @@ class Engine:
 
         Refcounts and live allocations are untouched — already-admitted
         slots keep their shared pages; only FUTURE admissions stop
-        matching until new prompts re-register."""
+        matching until new prompts re-register.  The allocator's cache
+        bookkeeping is flushed in the same operation (without counting
+        evictions: this is a policy reset, not cache pressure)."""
         if self._prefix is not None:
             self._prefix.clear()
+            self.page_pool.flush_cache()
 
     def submit(self, request: Request) -> Request:
         if request.prompt.size + request.max_new_tokens > self.max_len:
@@ -566,6 +620,16 @@ class Engine:
         return self.page_pool.n_used if self.paged else 0
 
     @property
+    def prefix_evictions(self) -> int:
+        """Warm-cache pages evicted (writer re-grant or budget sweep)."""
+        return self.page_pool.evictions if self.paged else 0
+
+    @property
+    def prefix_cached_pages(self) -> int:
+        """Refcount-0 pages currently matchable in the prefix index."""
+        return self.page_pool.n_cached if self.paged else 0
+
+    @property
     def peak_pages_in_use(self) -> int:
         """Allocator-owned high-water page count: raised inside every
         allocation-changing operation (admission alloc, prefix acquire,
@@ -608,9 +672,11 @@ class Engine:
         self.steps = self.host_syncs = self.decoded_tokens = 0
         self.prefill_chunks = 0
         self.shared_page_hits = self.cow_forks = self.shared_admissions = 0
+        self.skipped_prefill_tokens = 0
         self.peak_active = self.scheduler.allocator.n_active
         if self.paged:
             self.page_pool.reset_peak()
+            self.page_pool.evictions = 0
 
     # ------------------------------------------------------------------ #
     # admission + prefill
@@ -683,7 +749,8 @@ class Engine:
                     # landed on device yet — same-round admissions simply
                     # miss the sharing opportunity once
                     for slot, req in group:
-                        self._prefix.register(req.prompt, self._bt[slot])
+                        backing = self._prefix.register(req.prompt, self._bt[slot])
+                        self.page_pool.mark_indexed(backing)
             else:
                 self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
             first = self._sample(logits, padded_reqs, [0] * G)
@@ -753,8 +820,31 @@ class Engine:
             self._emitted[slot] = 0
             self._max_new[slot] = 0
             self._seeds[slot] = 0
-            self._temps[slot] = 0.0
             self._topks[slot] = 0
+            self._temps[slot] = 0.0
+            if self._share:
+                # Register the DECODE-FILLED pages before the slot releases:
+                # a follow-up turn whose prompt extends (prompt + reply)
+                # matches them read-only and prefills only its new suffix.
+                # The registered sequence stops one token short of the
+                # reply — token k's K/V is written while producing token
+                # k+1, so the LAST token's K/V is only (maybe) written by
+                # frozen-slot re-feeds; likewise an EOS tail ends at the
+                # EOS token itself, which is tokens[-1] and thus excluded.
+                # register() only keys FULL pages, so the partial last
+                # page is never offered.  Must precede release(): free()
+                # can only turn these pages into warm-cache entries if
+                # they are already marked as indexed.
+                seq = np.concatenate(
+                    [req.prompt, np.asarray(req.tokens[:-1], np.int32)]
+                )
+                full_end = (seq.size // self.page_size) * self.page_size
+                if full_end > req.prompt.size:
+                    self._rematerialize(
+                        slot, seq, int(req.prompt.size), full_end
+                    )
+                backing = self._prefix.register(seq, self._bt[slot])
+                self.page_pool.mark_indexed(backing)
             self.scheduler.release(slot)
             if self.paged:
                 # Compact the table row back to all-trash BEFORE the next
@@ -854,11 +944,55 @@ class Engine:
         if self._share:
             # the prompt's full pages are now completely written on device:
             # safe to offer them to future admissions
-            self._prefix.register(req.prompt, row)
+            backing = self._prefix.register(req.prompt, row)
+            self.page_pool.mark_indexed(backing)
         first = self._sample(logits, [req], [0])
         self._activate_slot(slot, req, plen, int(first[0]), time.perf_counter())
         done = self._maybe_finish(slot)
         return ([done] if done is not None else []), n
+
+    def _rematerialize(self, slot: int, seq: np.ndarray, start: int, end: int):
+        """Rewrite positions ``[start, end)`` of the slot's pages through
+        the (1, C) chunk-prefill program, discarding the logits.
+
+        Decode filled those K/V entries via the single-query decode path,
+        whose floating-point reduction order differs from the prefill
+        program's in the last bits.  Pages offered to the prefix index
+        must hold bitwise the bytes a cold re-prefill of the same tokens
+        would produce, or a follow-up turn that matches them can flip a
+        greedy argmax relative to an unshared run.  Re-feeding the
+        generated tokens through the canonical prefill program restores
+        those bytes; the cost is O(reply length) at release, OFF any
+        follow-up's TTFT path.  Only ``[start, end)`` needs rewriting:
+        ``end`` is the last full-page boundary (partial tails are never
+        indexed) and positions ``< start`` were prefill-written at
+        admission.  Reuses the one compiled chunk program — no extra
+        compilation, and pad positions past ``n_real`` write to the
+        trash page, so nothing outside the slot's own pages is touched.
+        """
+        C = self._chunk_C
+        row = self._bt[slot]
+        if self._chunk_jit is None:
+            model = self.model
+            self._chunk_jit = jax.jit(
+                lambda p, c, t, bt, st, nr: model.prefill_chunk(p, c, t, bt, st, nr),
+                donate_argnums=(1,),
+            )
+        while start < end:
+            n = min(C, end - start)
+            toks = np.zeros((1, C), np.int32)
+            toks[0, :n] = seq[start : start + n]
+            with use_dispatch(self._dcfg):
+                _, self.cache = self._chunk_jit(
+                    self.params,
+                    self.cache,
+                    jnp.asarray(toks),
+                    jnp.asarray(row),
+                    jnp.int32(start),
+                    jnp.int32(n),
+                )
+            self.prefill_chunks += 1
+            start += n
 
     # ------------------------------------------------------------------ #
     # the fused decode block (device-resident inner loop)

@@ -28,6 +28,19 @@ rejects duplicate ids before mutating anything, so a page can never be
 pushed onto the free list twice and later granted to two slots (silent KV
 aliasing).
 
+The allocator additionally owns the WARM-CACHE eviction policy: pages
+whose content is indexed (``mark_indexed``) become LRU-ordered cache
+entries when their last reader releases them.  ``alloc`` grants clean
+(unindexed) free pages first and only then EVICTS cached pages —
+least-recently-used first, announced through ``on_evict`` so the owner
+drops the matching :class:`PrefixIndex` keys in the same operation (a
+``match`` can therefore never hit a page after a writer re-granted it).
+``cache_budget`` caps how many refcount-0 pages stay matchable; the
+excess is evicted eagerly, again LRU-first.  This replaces the PR-5
+behavior where cached entries were dropped only when a writer happened
+to re-grant the page (lowest-id-first, i.e. the warm cache decayed in an
+order unrelated to its value).
+
 Pure host-side bookkeeping: no jax imports, trivially unit-testable
 (tests/test_scheduler.py).
 """
@@ -126,15 +139,50 @@ class PageAllocator:
     (admission, chunked prefill, COW fork), rather than being sampled on
     one engine code path.  ``reset_peak`` re-arms it to CURRENT usage,
     not zero: pages held across a counter reset stay observed.
+
+    WARM CACHE.  ``mark_indexed(pages)`` declares that a page's contents
+    are keyed in a content index (:class:`PrefixIndex`); when such a
+    page's last reader releases it, it becomes a CACHED entry — still on
+    the free list, contents intact, tracked in LRU order.  ``alloc``
+    then prefers clean (never-indexed) free pages and only EVICTS cached
+    entries when the clean supply runs out, least-recently-used first;
+    every eviction is announced through ``on_evict`` before the page is
+    handed to the writer, so index keys and list entries die together
+    and a later ``match`` can never alias rewritten storage.  Recency is
+    CHAIN-AWARE: pages listed earlier in a ``free``/``mark_indexed``
+    call are cached as more recent than later ones (callers pass
+    block-table order, and a chained prefix index loses everything below
+    a missing page — evicting a chain's deep tail costs a few matched
+    pages, evicting its head costs the whole chain).
+    ``cache_budget`` (None = unbounded) caps the number of resident
+    cached entries; the excess is evicted eagerly on release.  The
+    invariant the engine relies on: an indexed page at refcount 0 is
+    ALWAYS a cached entry, so a page can never leave the index's control
+    silently.  With ``mark_indexed`` never called the allocator behaves
+    exactly like the PR-5 one (pure lowest-id-first reuse).
     """
 
-    def __init__(self, n_pages: int):
+    def __init__(
+        self,
+        n_pages: int,
+        *,
+        cache_budget: Optional[int] = None,
+        on_evict: Optional[Callable[[List[int]], None]] = None,
+    ):
         if n_pages < 0:
             raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+        if cache_budget is not None and cache_budget < 0:
+            raise ValueError(f"cache_budget must be >= 0, got {cache_budget}")
         self.n_pages = n_pages
+        self.cache_budget = cache_budget
+        self.on_evict = on_evict
         self._free = list(range(n_pages - 1, -1, -1))  # stack, lowest id on top
         self._ref = [0] * n_pages
         self._peak = 0
+        # LRU-ordered cached pages (ref 0, contents indexed): oldest first
+        self._cached: "collections.OrderedDict[int, None]" = collections.OrderedDict()
+        self._indexed: set = set()  # pages whose contents are index-keyed
+        self.evictions = 0
 
     @property
     def n_free(self) -> int:
@@ -143,6 +191,10 @@ class PageAllocator:
     @property
     def n_used(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
 
     @property
     def peak_used(self) -> int:
@@ -171,12 +223,76 @@ class PageAllocator:
             )
         self._peak = peak
 
+    def mark_indexed(self, pages) -> None:
+        """Declare that ``pages`` back content-index entries.
+
+        A marked page that is (or later falls to) refcount 0 becomes a
+        cached entry instead of an anonymous free page: ``alloc`` skips
+        it while clean pages remain and announces its eviction through
+        ``on_evict`` when it finally is re-granted.  Idempotent; marking
+        an already-cached page refreshes its LRU recency.
+        """
+        pages = [int(p) for p in pages]
+        for p in pages:
+            if not (0 <= p < self.n_pages):
+                raise ValueError(f"page {p} out of range [0, {self.n_pages})")
+            self._indexed.add(p)
+        # reverse order: see free() — earlier-listed pages outlive later ones
+        for p in reversed(pages):
+            if self._ref[p] == 0:
+                self._cached.pop(p, None)
+                self._cached[p] = None  # most-recently-used position
+        self._enforce_budget()
+
+    def flush_cache(self) -> None:
+        """Forget every cached/indexed page WITHOUT counting evictions.
+
+        For owner-initiated index resets (``Engine.reset_prefix_cache``):
+        the owner clears its index itself, so no ``on_evict`` callback
+        fires and the eviction counter stays a policy-pressure metric.
+        """
+        self._cached.clear()
+        self._indexed.clear()
+
+    def _enforce_budget(self) -> None:
+        """Evict LRU cached entries beyond ``cache_budget`` (stay on free list)."""
+        if self.cache_budget is None:
+            return
+        evicted = []
+        while len(self._cached) > self.cache_budget:
+            page, _ = self._cached.popitem(last=False)  # LRU first
+            self._indexed.discard(page)
+            evicted.append(page)
+        if evicted:
+            self.evictions += len(evicted)
+            if self.on_evict is not None:
+                self.on_evict(evicted)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0:
             raise ValueError(f"cannot alloc {n} pages")
         if n > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        if not self._cached or n == 0:
+            pages = [self._free.pop() for _ in range(n)]
+        else:
+            # clean-first: spend never-indexed free pages (lowest id first)
+            # before evicting warm-cache entries, LRU first
+            clean = sorted(p for p in self._free if p not in self._cached)
+            pages = clean[:n]
+            evicted = []
+            while len(pages) < n:
+                page, _ = self._cached.popitem(last=False)  # LRU first
+                self._indexed.discard(page)
+                evicted.append(page)
+                pages.append(page)
+            if evicted:
+                self.evictions += len(evicted)
+                if self.on_evict is not None:
+                    # index keys die BEFORE the writer sees the page
+                    self.on_evict(list(evicted))
+            granted = set(pages)
+            self._free = [p for p in self._free if p not in granted]
         for p in pages:
             self._ref[p] = 1
         self._peak = max(self._peak, self.n_used)
@@ -193,6 +309,7 @@ class PageAllocator:
             except ValueError:  # not free and not referenced: cannot happen
                 return False
             self._ref[page] = 1
+            self._cached.pop(page, None)  # live again; re-cached on release
             self._peak = max(self._peak, self.n_used)
         else:
             self._ref[page] += 1
@@ -233,7 +350,18 @@ class PageAllocator:
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 self._free.append(p)
+        # Re-cache in REVERSE list order, so earlier-listed pages end up
+        # more recently used and outlive later ones.  Callers list pages
+        # in block-table (chain) order, and the chained prefix index
+        # loses every page BELOW a missing link — a chain's deep tail is
+        # always the cheaper eviction, its head the costlier one.
+        for p in reversed(pages):
+            if self._ref[p] == 0 and p in self._indexed:
+                # last reader gone, contents indexed: warm-cache entry
+                self._cached.pop(p, None)
+                self._cached[p] = None  # most-recently-used position
         self._free.sort(reverse=True)  # deterministic reuse order
+        self._enforce_budget()
 
 
 @dataclasses.dataclass
@@ -284,12 +412,15 @@ class PrefixIndex:
 
     Entries PERSIST after the owning request releases its pages: a
     refcount-0 page sits on the allocator free list with contents intact
-    — a warm prefix cache.  The engine calls :meth:`drop_pages` the
-    moment the allocator re-grants a page for writing, so a match can
-    never alias rewritten storage.  Registration is deferred until the
-    owner's prefill has actually landed on device (the engine registers
-    post-scatter / post-last-chunk), so a match never reads pages that
-    are still being computed.
+    — a warm prefix cache.  Lifetime is now allocator-driven: the engine
+    marks every registered page via ``PageAllocator.mark_indexed``, and
+    the allocator's ``on_evict`` callback invokes :meth:`drop_pages`
+    whenever a cached page is re-granted to a writer or swept by the
+    cache budget — keys and storage die together, so a match can never
+    alias rewritten storage.  Registration is deferred until the owner's
+    K/V has actually landed on device (the engine registers post-scatter
+    / post-last-chunk for prompts and at slot release for decode-filled
+    pages), so a match never reads pages that are still being computed.
 
     Host-side bookkeeping only.  Keys are CHAINED digests — page ``i``'s
     key hashes page ``i - 1``'s key together with page ``i``'s own token
@@ -321,7 +452,7 @@ class PrefixIndex:
             ).digest()
             yield key
 
-    def register(self, prompt: np.ndarray, pages) -> None:
+    def register(self, prompt: np.ndarray, pages) -> List[int]:
         """Index every FULL page of ``prompt`` backed by ``pages``.
 
         ``pages[i]`` must be the physical page holding positions
@@ -329,10 +460,15 @@ class PrefixIndex:
         row works verbatim).  First registration wins: an existing entry
         for the same key is kept — its page already holds identical
         content, and churning entries would invalidate live matches for
-        no gain.
+        no gain.  Returns the physical pages NOW backing the chain (the
+        kept page where an entry already existed) so the caller can hand
+        exactly those to ``PageAllocator.mark_indexed``.
         """
+        backing: List[int] = []
         for i, key in enumerate(self._page_keys(prompt)):
-            if key in self._by_key:
+            page = self._by_key.get(key)
+            if page is not None:  # first registration won; same content
+                backing.append(page)
                 continue
             page = int(pages[i])
             old = self._by_page.pop(page, None)
@@ -340,6 +476,8 @@ class PrefixIndex:
                 del self._by_key[old]
             self._by_key[key] = page
             self._by_page[page] = key
+            backing.append(page)
+        return backing
 
     def match(self, prompt: np.ndarray) -> List[int]:
         """Longest chain of indexed full-prefix pages for ``prompt``."""

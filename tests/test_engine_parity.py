@@ -483,3 +483,93 @@ def test_engine_sampling_deterministic_across_interleavings():
     while eng.has_work:
         eng.step()
     assert shared.tokens == alone.tokens
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_generated_page_reuse_parity(arch_id):
+    """Follow-up-turn reuse (the session cache): after a request finishes,
+    its DECODE-FILLED full pages are registered, so a second turn whose
+    prompt extends (prompt + reply) matches THROUGH the generated span and
+    prefills only its new suffix — emitting tokens bit-identical to a cold
+    engine that re-prefills the whole conversation.  Chunk-capable
+    families must actually skip past the first turn's prompt; the rest
+    run with sharing inert, which must change nothing."""
+    cfg = get_arch(arch_id, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    extras = modality_extras(cfg, rng)
+    warm = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, share_prefix=True
+    )
+    r1 = warm.run([Request(prompt=prompt, max_new_tokens=7, extras=extras)])[0]
+    # turn 2: the previous reply plus fresh user tokens
+    follow = np.concatenate(
+        [prompt, np.asarray(r1.tokens, np.int32),
+         rng.integers(0, cfg.vocab, size=(3,)).astype(np.int32)]
+    )
+    fextras = modality_extras(cfg, rng)
+    r2 = warm.run([Request(prompt=follow.copy(), max_new_tokens=4, extras=fextras)])[0]
+    chunkable = cfg.family in ("dense", "moe") and cfg.sliding_window is None
+    if chunkable:
+        # 3 registered full pages cover positions 0..11; the first turn's
+        # PROMPT only reaches position 5 — the match ran through pages
+        # the donor's decode stream filled
+        assert r2.prefill_skipped == 12, f"no generated-page reuse for {arch_id}"
+    else:
+        assert r2.prefill_skipped == 0  # inert, by design
+    cold = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, share_prefix=True
+    )
+    ref = cold.run([Request(prompt=follow.copy(), max_new_tokens=4, extras=fextras)])[0]
+    assert r2.tokens == ref.tokens, f"generated-page reuse diverged for {arch_id}"
+
+
+def test_eviction_churn_no_stale_matches():
+    """Warm-cache eviction under a tight budget: cached pages are swept
+    (budget) and re-granted (writer pressure), every eviction dropping its
+    index keys with it.  A follow-up on the NEWEST conversation still
+    reuses pages; a follow-up on the OLDEST — whose pages were evicted and
+    refilled with other content — must match nothing stale and still
+    decode bit-identically to a cold engine."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32) for _ in range(3)
+    ]
+    warm = Engine(
+        model, params, n_slots=1, max_len=32, page_size=4, kv_pages=5,
+        share_prefix=True, warm_cache_pages=2, decode_block=1,
+    )
+    firsts = [warm.run([Request(prompt=p, max_new_tokens=5)])[0] for p in prompts]
+    # 3 pages indexed per finish against a budget of 2, and each next
+    # admission needs 4 of 5 pages: both eviction paths (budget sweep,
+    # writer re-grant) have fired by now
+    assert warm.prefix_evictions > 0
+    assert warm.prefix_cached_pages <= 2 and warm.pages_in_use == 0
+
+    def followup(i):
+        return np.concatenate(
+            [prompts[i], np.asarray(firsts[i].tokens, np.int32),
+             rng.integers(0, cfg.vocab, size=(2,)).astype(np.int32)]
+        )
+
+    # newest conversation: its pages survived the churn — real reuse
+    f2 = followup(2)
+    r2 = warm.run([Request(prompt=f2.copy(), max_new_tokens=4)])[0]
+    assert r2.prefill_skipped > 0
+    # oldest conversation: its pages were evicted and refilled with other
+    # requests' KV — a stale index entry would alias that storage
+    f0 = followup(0)
+    r0 = warm.run([Request(prompt=f0.copy(), max_new_tokens=4)])[0]
+    for f, r in ((f2, r2), (f0, r0)):
+        cold = Engine(
+            model, params, n_slots=1, max_len=32, page_size=4, kv_pages=5,
+            decode_block=1, prefill_chunk=4,
+        )
+        ref = cold.run([Request(prompt=f.copy(), max_new_tokens=4)])[0]
+        assert r.tokens == ref.tokens, "stale warm-cache match corrupted decode"
+    assert warm.pages_in_use == 0

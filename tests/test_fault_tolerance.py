@@ -1,0 +1,136 @@
+"""Fault-tolerance machinery beyond the test_substrate.py smoke: retry
+exhaustion, non-retryable passthrough, median-step regression detection,
+and one engine-integration case wrapping the jitted fused decode block."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import RetryableStep, StepWatchdog
+
+
+# --------------------------------------------------------------------------- #
+# RetryableStep
+# --------------------------------------------------------------------------- #
+def test_retry_exhaustion_propagates_after_budget():
+    """An always-failing step is attempted ``max_retries + 1`` times, every
+    failure is counted, and the LAST error propagates to the restart loop."""
+    calls = {"n": 0}
+
+    def always_down():
+        calls["n"] += 1
+        raise RuntimeError(f"flap {calls['n']}")
+
+    r = RetryableStep(always_down, max_retries=2)
+    with pytest.raises(RuntimeError, match="flap 3"):
+        r()
+    assert calls["n"] == 3  # initial attempt + 2 retries
+    assert r.total_retries == 3
+    # the wrapper stays usable after exhaustion (restart-loop re-entry)
+    with pytest.raises(RuntimeError, match="flap 6"):
+        r()
+    assert r.total_retries == 6
+
+
+def test_non_retryable_error_passes_through_immediately():
+    """Errors outside ``retryable`` are programming bugs, not link flaps:
+    no retry, no counting — one attempt, straight up the stack."""
+    calls = {"n": 0}
+
+    def buggy():
+        calls["n"] += 1
+        raise TypeError("not a transient fault")
+
+    r = RetryableStep(buggy, max_retries=5, retryable=(ValueError,))
+    with pytest.raises(TypeError):
+        r()
+    assert calls["n"] == 1 and r.total_retries == 0
+
+
+def test_retry_zero_budget_is_single_attempt():
+    r = RetryableStep(lambda: (_ for _ in ()).throw(ValueError("x")), max_retries=0)
+    with pytest.raises(ValueError):
+        r()
+    assert r.total_retries == 1
+
+
+# --------------------------------------------------------------------------- #
+# StepWatchdog median-regression detection
+# --------------------------------------------------------------------------- #
+def test_watchdog_no_flags_during_warmup():
+    """The first 5 observations can never flag — the rolling median is not
+    yet trustworthy, and a cold-compile first step is NOT a straggler."""
+    w = StepWatchdog(straggler_factor=2.0)
+    assert w.observe(0, 100.0) is False  # compile step
+    for i in range(1, 5):
+        assert w.observe(i, 100.0 if i % 2 else 0.01) is False
+    assert w.straggler_steps == []
+
+
+def test_watchdog_median_regression_and_rebaseline():
+    """A step slower than factor x the rolling median flags; a SUSTAINED
+    slowdown re-baselines once the window's median catches up, so only the
+    regression edge is flagged — not every step of the new normal."""
+    w = StepWatchdog(straggler_factor=3.0, window=8)
+    for i in range(8):
+        w.observe(i, 1.0)
+    assert w.median == 1.0
+    assert w.observe(8, 3.5) is True  # 3.5 > 3.0 x 1.0
+    assert w.straggler_steps == [8]
+    assert w.observe(9, 2.9) is False  # under the threshold
+    # sustained 2.9s steps roll the 1.0s history out of the window...
+    for i in range(10, 18):
+        w.observe(i, 2.9)
+    assert w.median == 2.9
+    # ...so the SAME 3.5s duration is now ordinary, not a straggler
+    assert w.observe(18, 3.5) is False
+    assert w.straggler_steps == [8]
+
+
+def test_watchdog_median_empty_and_window():
+    w = StepWatchdog(window=4)
+    assert w.median == 0.0
+    for i, s in enumerate([10.0, 10.0, 1.0, 1.0, 1.0, 1.0]):
+        w.observe(i, s)
+    assert w.median == 1.0  # the 10s steps aged out of the window
+
+
+# --------------------------------------------------------------------------- #
+# Engine integration: retries around the donated fused decode block
+# --------------------------------------------------------------------------- #
+def test_retryable_step_wraps_engine_decode_block():
+    """A transient failure raised BEFORE the fused block dispatches (the
+    realistic pre-dispatch link flap — after dispatch, donation has
+    consumed the buffers and the restart loop owns recovery) retries
+    transparently: the request's tokens stay bit-identical to an
+    undisturbed engine."""
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+    from repro.serving import Engine, Request
+
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32)
+
+    ref = Engine(model, params, n_slots=2, max_len=16, decode_block=4).run(
+        [Request(prompt=prompt.copy(), max_new_tokens=6)]
+    )[0]
+
+    eng = Engine(model, params, n_slots=2, max_len=16, decode_block=4)
+    real = eng._fused_fn(True)  # build + cache the jitted greedy block
+    state = {"armed": True}
+
+    def flaky(*args, **kw):
+        if state["armed"]:
+            state["armed"] = False
+            raise RuntimeError("link flap before dispatch")
+        return real(*args, **kw)
+
+    wrapped = RetryableStep(flaky, max_retries=2, retryable=(RuntimeError,))
+    eng._fused_cache[True] = wrapped
+    out = eng.run([Request(prompt=prompt.copy(), max_new_tokens=6)])[0]
+    assert wrapped.total_retries == 1
+    assert not state["armed"]  # the failure really fired
+    assert out.tokens == ref.tokens

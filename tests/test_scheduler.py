@@ -718,3 +718,146 @@ def test_engine_degraded_reservation_failure_restores_peak(small_model):
     while eng.has_work:
         eng.step()
     assert follower.done and eng.pages_in_use == 0
+
+
+# --------------------------------------------------------------------------- #
+# PageAllocator warm cache (LRU eviction, budget, clean-first grants)
+# --------------------------------------------------------------------------- #
+def test_page_allocator_clean_first_then_lru_eviction():
+    """``alloc`` spends never-indexed free pages before evicting cached
+    entries, and evicts least-recently-used first — announcing every
+    eviction through ``on_evict`` BEFORE the writer sees the page."""
+    evicted = []
+    a = PageAllocator(4, on_evict=evicted.extend)
+    g = a.alloc(2)  # pages [0, 1] — a chain, head first
+    a.mark_indexed(g)
+    a.free(g)  # both cached; the chain TAIL (page 1) is the older entry
+    # clean supply [2, 3] covers this grant: nothing evicted
+    assert a.alloc(2) == [2, 3]
+    assert evicted == [] and a.evictions == 0 and a.n_cached == 2
+    # clean supply exhausted: the grant must evict, LRU (chain tail) first
+    assert a.alloc(2) == [1, 0]
+    assert evicted == [1, 0] and a.evictions == 2 and a.n_cached == 0
+
+
+def test_page_allocator_lru_recency_refresh():
+    """Re-marking a cached page moves it to the most-recently-used slot,
+    so the OTHER entries are the ones a short grant evicts — and recency
+    is chain-aware: within one call, earlier-listed pages outlive later
+    ones (a chained index loses everything below a missing page)."""
+    evicted = []
+    a = PageAllocator(3, on_evict=evicted.extend)
+    g = a.alloc(3)
+    a.mark_indexed(g)
+    a.free(g)  # eviction order (oldest first): 2, 1, 0
+    a.mark_indexed([2])  # refresh the tail: order now 1, 0, 2
+    assert a.alloc(1) == [1]
+    assert evicted == [1]
+
+
+def test_page_allocator_cache_budget_sweeps_on_release():
+    """``cache_budget`` caps resident cached entries: the excess is
+    swept eagerly when the last reader releases, LRU first."""
+    evicted = []
+    a = PageAllocator(4, cache_budget=2, on_evict=evicted.extend)
+    g = a.alloc(4)
+    a.mark_indexed(g)
+    a.free(g)  # 4 cached > budget 2: sweep the two oldest (the chain tail)
+    assert evicted == [3, 2] and a.evictions == 2
+    assert a.n_cached == 2 and a.n_free == 4  # swept pages stay free
+    with pytest.raises(ValueError):
+        PageAllocator(2, cache_budget=-1)
+
+
+def test_page_allocator_budget_zero_disables_warm_cache():
+    a = PageAllocator(2, cache_budget=0)
+    g = a.alloc(1)
+    a.mark_indexed(g)
+    a.free(g)  # swept immediately
+    assert a.n_cached == 0 and a.evictions == 1
+
+
+def test_page_allocator_flush_cache_is_silent():
+    """``flush_cache`` (owner-initiated reset) forgets every entry
+    without firing ``on_evict`` or counting evictions — the counter
+    stays a cache-pressure metric."""
+    evicted = []
+    a = PageAllocator(2, on_evict=evicted.extend)
+    g = a.alloc(2)
+    a.mark_indexed(g)
+    a.free(g)
+    assert a.n_cached == 2
+    a.flush_cache()
+    assert a.n_cached == 0 and a.evictions == 0 and evicted == []
+    assert a.alloc(2) == [0, 1]  # plain clean pages again
+
+
+def test_page_allocator_mark_indexed_validates_and_caches_ref0():
+    a = PageAllocator(2)
+    with pytest.raises(ValueError):
+        a.mark_indexed([2])
+    g = a.alloc(1)
+    a.mark_indexed(g)  # live page: indexed but not yet cached
+    assert a.n_cached == 0
+    a.free(g)  # ...cached the moment the last reader leaves
+    assert a.n_cached == 1
+    assert a.acquire(g[0])  # revive: live again, off the cache
+    assert a.n_cached == 0
+    a.free(g)
+    assert a.n_cached == 1  # still indexed: re-cached on re-release
+
+
+def test_page_allocator_inert_without_mark_indexed():
+    """With ``mark_indexed`` never called the allocator is byte-for-byte
+    the PR-5 one: pure lowest-id-first reuse, no evictions, no cache."""
+    a = PageAllocator(3)
+    g = a.alloc(3)
+    a.free(g)
+    assert a.alloc(2) == [0, 1]
+    assert a.evictions == 0 and a.n_cached == 0
+
+
+def test_scheduler_same_batch_match_then_reserve_ordering(small_model):
+    """Several admissions landing in one ``Engine.step`` must respect
+    the match-then-reserve window: a later request in the same placement
+    batch may NOT be granted (as writer) a cached refcount-0 page an
+    earlier request just matched.  The matcher's ``acquire`` pulls the
+    page off the free list inside its own reservation, so the writer
+    behind it queues instead of stealing the storage."""
+    from repro.serving import Engine, Request
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(23)
+    px = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)  # 1 full page
+    eng = Engine(
+        model, params, n_slots=3, max_len=16, page_size=4, kv_pages=4,
+        share_prefix=True, decode_block=1,
+    )
+    donor = eng.submit(Request(prompt=px, max_new_tokens=2))  # pages [0, 1]
+    while eng.has_work:
+        eng.step()
+    assert donor.done and eng.pages_in_use == 0
+    assert eng.prefix_cached_pages == 1  # px's page 0 is warm
+    # one step admits BOTH: the matcher (head of queue) revives page 0
+    # read-only; the writer behind it wants 2 fresh pages but only one
+    # clean page remains — it must queue, NOT evict/steal page 0
+    follow = np.concatenate([px, rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)])
+    matcher = eng.submit(Request(prompt=follow, max_new_tokens=4))  # need 3
+    writer = eng.submit(
+        Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
+                max_new_tokens=2)  # need 2 > 1 clean page left
+    )
+    eng.step()
+    assert eng.shared_admissions == 1 and not matcher.done
+    assert eng.n_waiting == 1  # the writer queued behind the match
+    assert eng.prefix_evictions == 0  # page 0 was never re-granted
+    while eng.has_work:
+        eng.step()
+    assert matcher.done and writer.done
+    # determinism cross-check: the matcher saw exactly the donor's bytes
+    cold = Engine(
+        model, params, n_slots=1, max_len=16, page_size=4, kv_pages=4,
+        prefill_chunk=4,
+    )
+    ref = cold.run([Request(prompt=follow.copy(), max_new_tokens=4)])[0]
+    assert matcher.tokens == ref.tokens
