@@ -713,6 +713,324 @@ def check_sessions_rows(rows, *, tolerance: float = 0.3) -> int:
     return failures
 
 
+def run_overload_trace(
+    archs=("llama3.2-1b",),
+    *,
+    rate: float = 2000.0,
+    n_requests: int = 24,
+    n_slots: int = 3,
+    prompt_range=(6, 12),
+    gen_range=(24, 32),
+    deadline_ms: float = 300.0,
+    tiers=(1.0, 0.5),
+    tier_q: int = 2,
+    seed: int = 0,
+    alpha: float = 0.5,
+    q: int = 2,
+    decode_block: int = 4,
+    page_size: int = 4,
+    kv_pages: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    warmup: bool = True,
+    inject: str = "",
+):
+    """Replay one BURST trace twice — plain FIFO, then tiered admission —
+    and gate overload behavior in the same run (:func:`check_overload_rows`).
+
+    ``rate`` far above service rate piles ``n_requests`` onto ``n_slots``
+    slots at once, so the FIFO row's tail requests wait out the whole
+    backlog: its p95 TTFT is the makespan.  The tiered row arms the full
+    overload stack on the SAME traffic: every request carries a deadline
+    of ``min(deadline_ms, 0.45 * FIFO makespan)`` — same-run-relative so
+    it binds on any runner speed (waiters not admitted in time shed with
+    a structured :class:`RejectedOverload`), admission degrades new requests to deeper
+    rank tiers under queue/page pressure (each degraded response carries
+    the tier's spectral-bound certificate), and a sprinkling of
+    priority-1 requests exercises page-reclaiming preemption.  Quality
+    sheds before latency does — the row reports how much of each.
+
+    ``inject="nan"`` adds a third row: the FIFO trace re-run with a
+    :class:`FaultInjector` poisoning one request's logits to NaN
+    mid-decode.  The gate demands exactly that request quarantined
+    (status ``"error"``, tokens a clean prefix) and every OTHER request
+    bit-identical to the uninjected FIFO row — a numerical blow-up in one
+    slot must never leak into the rest of the batch.
+
+    Needs ``alpha`` > 0: tiers are prefix slices of the compressed
+    factors, so an uncompressed checkpoint has nothing to slice.
+    """
+    from repro.data.synthetic import modality_extras
+    from repro.runtime.fault_tolerance import FaultInjector
+    from repro.serving import Engine, Request, SamplingParams
+    from repro.serving.engine import AdmissionPolicy, percentile
+
+    assert alpha > 0, "overload trace needs a compressed checkpoint (--alpha)"
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch, reduced=True)
+        model = build_model(cfg)
+        params = spectralize_params(
+            model.init(jax.random.PRNGKey(seed)), jax.random.PRNGKey(9)
+        )
+        params, _, _ = compress_tree(
+            params, CompressionPolicy(alpha=alpha, q=q, min_dim=16),
+            jax.random.PRNGKey(1),
+        )
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests)).tolist()
+        max_len = prompt_range[1] + gen_range[1]
+        eff_pages = kv_pages or n_slots * (-(-max_len // page_size))
+        trace = []
+        for i in range(n_requests):
+            trace.append(dict(
+                prompt=rng.integers(
+                    0, cfg.vocab, size=(int(rng.integers(*prompt_range)),)
+                ).astype(np.int32),
+                max_new=int(rng.integers(*gen_range)),
+                # a few high-priority requests exercise preemption: when one
+                # reaches the queue head it may reclaim a lower-priority slot
+                priority=1 if i % 8 == 3 else 0,
+            ))
+
+        def build_reqs(*, deadline=None, priorities: bool):
+            out = []
+            for i, t in enumerate(trace):
+                out.append(Request(
+                    prompt=t["prompt"].copy(),
+                    max_new_tokens=t["max_new"],
+                    sampling=SamplingParams(
+                        temperature=temperature, top_k=top_k, seed=seed + i
+                    ),
+                    extras=modality_extras(cfg, np.random.default_rng(seed + i)),
+                    deadline_ms=deadline,
+                    min_tier=len(tiers) - 1,
+                    priority=t["priority"] if priorities else 0,
+                ))
+            return out
+
+        def build_engine(*, tiered: bool, injector=None):
+            return Engine(
+                model, params, n_slots=n_slots, max_len=max_len,
+                decode_block=decode_block, page_size=page_size,
+                kv_pages=eff_pages,
+                share_prefix=tiered,  # preempted K/V re-indexes as warm cache
+                tiers=tiers if tiered else None, tier_q=tier_q,
+                admission=AdmissionPolicy(
+                    n_tiers=len(tiers),
+                    degrade_queue_depth=max(2, n_slots),
+                    degrade_free_frac=0.5,
+                ) if tiered else None,
+                preempt=tiered,
+                injector=injector,
+            )
+
+        def warm(eng, *, tiered: bool):
+            # compile outside the clock: every admission group size at each
+            # trace prompt bucket, per tier (prefill programs + the fused
+            # block), plus one continuation-length prompt so a preemption
+            # resume mid-trace does not hit a cold bucket
+            wrng = np.random.default_rng(seed + 1)
+            wsp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed)
+            lens = sorted({t["prompt"].size for t in trace})
+            lens.append(min(max_len - 2, prompt_range[1] + gen_range[0]))
+            gs, g = [], 1
+            while g < n_slots:
+                gs.append(g)
+                g *= 2
+            gs.append(n_slots)
+            for tier in range(len(tiers) if tiered else 1):
+                for g in gs:
+                    for n in lens:
+                        eng.reset_prefix_cache()
+                        eng.run([
+                            Request(
+                                prompt=wrng.integers(0, cfg.vocab, size=(int(n),)),
+                                max_new_tokens=2, sampling=wsp,
+                                extras=modality_extras(cfg, wrng),
+                                tier=tier,
+                            )
+                            for _ in range(g)
+                        ])
+            eng.reset_prefix_cache()
+            eng.reset_counters()
+
+        def replay(eng, reqs, *, label, arm=None, deadline=None):
+            if warmup:
+                warm(eng, tiered=eng.tiers != (1.0,))
+            if arm is not None:
+                arm(eng)  # post-warmup: uid counter and step clock are live
+            t0 = time.perf_counter()
+            done = eng.run(reqs, arrivals=arrivals)
+            dt = time.perf_counter() - t0
+            assert len(done) == n_requests, (len(done), n_requests)
+            ok = [r for r in done if r.status == "ok"]
+            shed = [r for r in done if r.status == "shed"]
+            errored = [r for r in done if r.status == "error"]
+            ttfts = sorted(r.ttft for r in ok)
+            lats = sorted(r.latency for r in ok)
+            n_tok = sum(len(r.tokens) for r in done)
+            cert_bounds = [
+                c.prob_deviation_bound
+                for c in eng.tier_certificates
+                if c is not None
+            ]
+            row = dict(
+                name=f"overload={arch}+{label}",
+                arch=f"{arch}+{label}",
+                seconds=dt,
+                tok_s=n_tok / dt,
+                p50_ms=percentile(lats, 0.5) * 1e3 if lats else 0.0,
+                p95_ms=percentile(lats, 0.95) * 1e3 if lats else 0.0,
+                ttft_ms=float(np.mean(ttfts)) * 1e3 if ttfts else 0.0,
+                p95_ttft_ms=percentile(ttfts, 0.95) * 1e3 if ttfts else 0.0,
+                completed=len(ok),
+                shed=len(shed),
+                errored=len(errored),
+                degraded=eng.degraded_admissions,
+                preempted=eng.preemptions,
+                quarantined=eng.quarantined,
+                cert_bound=max(cert_bounds) if cert_bounds else 0.0,
+                n_requests=n_requests,
+                decode_steps=eng.steps,
+                host_syncs=eng.host_syncs,
+                tok_per_sync=eng.tokens_per_sync,
+                util=eng.batch_utilization,
+                peak_active=eng.peak_active,
+                kv_bytes_cap=eng.kv_bytes_capacity,
+                kv_bytes_peak=eng.kv_bytes_peak,
+                pages_peak=eng.peak_pages_in_use,
+                prefill_chunks=eng.prefill_chunks,
+                shared_hits=eng.shared_page_hits,
+                cow_forks=eng.cow_forks,
+                # same-run gate currency (underscore keys never reach
+                # CSV/JSON): structured-rejection compliance + greedy tokens
+                _shed_structured=all(
+                    r.rejected is not None
+                    and r.rejected.uid == r.uid
+                    and r.rejected.reason == "deadline-expired"
+                    and r.rejected.waited_ms >= deadline
+                    for r in shed
+                ),
+                _status=[r.status for r in done],
+                _tokens=(
+                    [list(r.tokens) for r in reqs] if temperature == 0.0 else None
+                ),
+            )
+            return row
+
+        fifo_row = replay(build_engine(tiered=False),
+                          build_reqs(priorities=False),
+                          label="fifo")
+        rows.append(fifo_row)
+        # the deadline must BIND on this runner or the tiered row gates
+        # nothing: an absolute wall-clock deadline a fast machine drains
+        # the whole burst under never expires.  ``deadline_ms`` is a
+        # ceiling — the effective deadline is capped at just under half
+        # the measured FIFO makespan, i.e. the wait the backlog tail is
+        # guaranteed to exceed under FIFO pacing, whatever this runner's
+        # speed.
+        eff_deadline = min(deadline_ms, fifo_row["seconds"] * 1e3 * 0.45)
+        rows.append(replay(build_engine(tiered=True),
+                           build_reqs(deadline=eff_deadline, priorities=True),
+                           label="tiered", deadline=eff_deadline))
+        if inject == "nan":
+            # poison the FIRST trace request at its SECOND decode token:
+            # admitted in the first step (so the first fused block, where
+            # steps_done == 0, covers the poison step), with one clean token
+            # already emitted (so the prefix gate has a prefix to check).
+            # Armed POST-warmup: warmup consumes uids and the step clock
+            # resets at the warmup boundary.
+            injector = FaultInjector()
+
+            def arm(eng):
+                injector.nan_logits = (eng._next_uid, min(1, decode_block - 1))
+                eng.injector = injector
+
+            row = replay(build_engine(tiered=False),
+                         build_reqs(priorities=False),
+                         label="inject-nan", arm=arm)
+            row["_fired"] = injector.fired.get("nan_logits", 0)
+            rows.append(row)
+    return rows
+
+
+def check_overload_rows(rows) -> int:
+    """Same-run FIFO-vs-tiered (and optional fault-injection) gates.
+
+    Both rows replayed the IDENTICAL burst on the same machine, so the
+    comparisons are deterministic where they can be and same-run-relative
+    where timing is involved:
+
+    - the FIFO row completes everything and sheds nothing (no policy);
+    - the tiered row sheds at least one deadline-expired waiter, every
+      shed request carries a structured rejection whose ``waited_ms``
+      proves the deadline really expired, and p95 TTFT over its COMPLETED
+      requests is strictly below the FIFO row's (the backlog tail the
+      deadline cut off);
+    - at least one admission was degraded to a deeper tier, and the
+      deepest tier's certificate bound is finite and positive (quality
+      shed is REPORTED, not silent);
+    - the inject row (when present) quarantines exactly the poisoned
+      request — status ``"error"``, tokens a clean PREFIX of the
+      uninjected run's — and every other request is bit-identical.
+    """
+    by_arch = {r["arch"]: r for r in rows if "arch" in r}
+    failures = 0
+    for arch, tiered in by_arch.items():
+        if not arch.endswith("+tiered"):
+            continue
+        label = arch[: -len("+tiered")]
+        fifo = by_arch.get(f"{label}+fifo")
+        if fifo is None:
+            continue
+        checks = [
+            ("fifo_completes_all", fifo["completed"] == fifo["n_requests"],
+             f"{fifo['completed']} == {fifo['n_requests']}"),
+            ("fifo_sheds_nothing", fifo["shed"] == 0, f"{fifo['shed']} == 0"),
+            ("tiered_sheds", tiered["shed"] > 0, f"{tiered['shed']} > 0"),
+            ("tiered_completes_some", tiered["completed"] > 0,
+             f"{tiered['completed']} > 0"),
+            ("shed_structured", bool(tiered["_shed_structured"]),
+             "every shed request carries a deadline-expired rejection"),
+            ("p95_ttft_ms",
+             tiered["p95_ttft_ms"] < fifo["p95_ttft_ms"],
+             f"{tiered['p95_ttft_ms']:.1f} < {fifo['p95_ttft_ms']:.1f}"),
+            ("degraded", tiered["degraded"] > 0, f"{tiered['degraded']} > 0"),
+            ("cert_bound",
+             0.0 < tiered["cert_bound"] < float("inf"),
+             f"0 < {tiered['cert_bound']:.3g} < inf"),
+        ]
+        inj = by_arch.get(f"{label}+inject-nan")
+        if inj is not None:
+            n_err = sum(1 for s in inj["_status"] if s == "error")
+            bad = [i for i, s in enumerate(inj["_status"]) if s == "error"]
+            prefix_ok = others_ok = True
+            if inj.get("_tokens") is not None and fifo.get("_tokens") is not None:
+                for i, (got, want) in enumerate(zip(inj["_tokens"], fifo["_tokens"])):
+                    if i in bad:
+                        prefix_ok &= 0 < len(got) < len(want) and got == want[: len(got)]
+                    else:
+                        others_ok &= got == want
+            checks += [
+                ("inject_fired", inj["_fired"] == 1, f"{inj['_fired']} == 1"),
+                ("quarantined_exactly_one",
+                 inj["quarantined"] == 1 and n_err == 1,
+                 f"quarantined={inj['quarantined']} errored={n_err}"),
+                ("poisoned_prefix", prefix_ok,
+                 "poisoned tokens are a clean prefix of the uninjected run"),
+                ("others_bit_identical", others_ok,
+                 "every other request matches the uninjected run"),
+            ]
+        for metric, ok, detail in checks:
+            print(
+                f"[perf-smoke] {label} overload {metric}: {detail} "
+                f"{'OK' if ok else 'VIOLATION'}"
+            )
+            failures += 0 if ok else 1
+    return failures
+
+
 def write_json(rows, json_path, *, config=None):
     """Write trace rows as the BENCH_serving.json result document."""
     keys = (
@@ -722,12 +1040,15 @@ def write_json(rows, json_path, *, config=None):
         "n_requests", "decode_steps", "host_syncs", "tok_per_sync", "util",
         "peak_active", "kv_bytes_cap", "kv_bytes_peak", "pages_peak",
         "prefill_chunks", "shared_hits", "cow_forks", "share_supported",
+        "p95_ttft_ms", "completed", "shed", "errored", "degraded",
+        "preempted", "quarantined", "cert_bound",
     )
-    kind = (
-        "sessions_trace"
-        if any("reprefill_tok" in r for r in rows)
-        else "poisson_trace"
-    )
+    if any("reprefill_tok" in r for r in rows):
+        kind = "sessions_trace"
+    elif any("shed" in r for r in rows):
+        kind = "overload_trace"
+    else:
+        kind = "poisson_trace"
     doc = {
         "kind": kind,
         "config": config or {},
@@ -908,6 +1229,16 @@ def emit_csv(rows, csv_path=None):
                     f";evictions={r['evictions']}"
                     f";cached_pages={r['cached_pages']}"
                 )
+            if "shed" in r:  # overload-trace columns
+                extra += (
+                    f";p95_ttft_ms={r['p95_ttft_ms']:.0f}"
+                    f";completed={r['completed']}"
+                    f";shed={r['shed']}"
+                    f";degraded={r['degraded']}"
+                    f";preempted={r['preempted']}"
+                    f";quarantined={r['quarantined']}"
+                    f";cert_bound={r['cert_bound']:.4g}"
+                )
             lines.append(
                 f"serving/{r['name']},{r['seconds']*1e6:.0f},"
                 f"tok_s={r['tok_s']:.1f};p50_ms={r['p50_ms']:.0f};"
@@ -952,12 +1283,15 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--trace",
-        choices=["poisson", "sessions"],
+        choices=["poisson", "sessions", "overload"],
         default=None,
         help="replay an arrival trace through the continuous-batching "
         "engine: 'poisson' = independent requests; 'sessions' = "
         "multi-turn conversations replayed TWICE (prefix sharing off, "
-        "then on) with the same-run session-cache gate",
+        "then on) with the same-run session-cache gate; 'overload' = "
+        "one burst replayed TWICE (plain FIFO, then tiered admission "
+        "with deadline shedding and preemption) with the same-run "
+        "overload gate",
     )
     ap.add_argument("--arch", default="llama3.2-1b",
                     help="comma-separated reduced arch ids (trace mode)")
@@ -1008,6 +1342,16 @@ if __name__ == "__main__":
                     "the slots backed by the same page budget — the "
                     "admitted-concurrency/throughput comparison the paged "
                     "pool exists for")
+    ap.add_argument("--deadline-ms", type=float, default=300.0,
+                    help="admission deadline for the overload trace's "
+                    "tiered row (waiters shed past it)")
+    ap.add_argument("--tiers", default="1.0,0.5",
+                    help="comma-separated rank fractions for the overload "
+                    "trace's tiered row (first must be 1.0)")
+    ap.add_argument("--inject", choices=["nan"], default=None,
+                    help="overload trace: add a fault-injection row "
+                    "(one request's logits poisoned to NaN mid-decode) "
+                    "gated on exact single-request quarantine")
     ap.add_argument("--no-warmup", action="store_true",
                     help="include jit compile time in the trace row")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -1147,6 +1491,35 @@ if __name__ == "__main__":
             warm_cache_pages=args.warm_cache_pages,
             row_suffix="+turns+shared", **sess_kw,
         )
+    elif args.trace == "overload":
+        # one invocation = two (or three, with --inject) rows over the
+        # identical burst — plain FIFO, tiered admission, optionally a
+        # fault-injected FIFO re-run — gated against each other
+        tiers = tuple(float(f) for f in args.tiers.split(",") if f)
+        page = args.page_size or 4
+        eff = dict(page_size=page, kv_pages=args.kv_pages,
+                   deadline_ms=args.deadline_ms, tiers=args.tiers,
+                   inject=args.inject or "")
+        arch_list = tuple(a.strip() for a in args.arch.split(",") if a.strip())
+        rows = run_overload_trace(
+            arch_list,
+            rate=args.rate,
+            n_requests=args.n_requests,
+            n_slots=args.n_slots,
+            prompt_range=tuple(int(x) for x in args.prompt_range.split(",")),
+            gen_range=tuple(int(x) for x in args.gen_range.split(",")),
+            deadline_ms=args.deadline_ms,
+            tiers=tiers,
+            seed=args.seed,
+            alpha=args.alpha or 0.5,
+            decode_block=args.decode_block,
+            page_size=page,
+            kv_pages=args.kv_pages,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            warmup=not args.no_warmup,
+            inject=args.inject or "",
+        )
     elif args.sweep_backends:
         rows = run_backend_sweep()
     else:
@@ -1191,3 +1564,9 @@ if __name__ == "__main__":
         n_bad = check_sessions_rows(rows, tolerance=args.tolerance / 2)
         if n_bad:
             sys.exit(f"[perf-smoke] {n_bad} sessions gate(s) violated")
+    if args.trace == "overload":
+        # same-run: FIFO vs tiered admission over the identical burst,
+        # plus exact-quarantine gates when --inject armed a fault
+        n_bad = check_overload_rows(rows)
+        if n_bad:
+            sys.exit(f"[perf-smoke] {n_bad} overload gate(s) violated")

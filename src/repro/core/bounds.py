@@ -23,6 +23,7 @@ __all__ = [
     "softmax_perturbation_bound",
     "CompressionCertificate",
     "certify_head",
+    "certify_tier",
 ]
 
 
@@ -83,5 +84,51 @@ def certify_head(
         feature_radius=R,
         prob_deviation_bound=float(softmax_perturbation_bound(err, R)),
         rank=rank,
+        q=q,
+    )
+
+
+def certify_tier(
+    a: jax.Array,
+    b: jax.Array,
+    tier_rank: int,
+    key: jax.Array,
+    *,
+    q: int,
+    feature_radius: float | None = None,
+) -> CompressionCertificate:
+    """Thm-3.2 certificate for a *nested tier* of one factor pair.
+
+    The tier-``r'`` head is the prefix slice of the stored rank-``r`` factors,
+    so the extra deviation a degraded tier introduces over the serving tier is
+    exactly the spectral norm of the dropped tail ``A[:, r':] @ B[r':, :]``.
+    Because RSI orders directions by decreasing singular value this is just
+    the largest dropped singular value — cheap to read off the factor norms
+    without rematerializing W.
+
+    ``feature_radius`` defaults to the column-norm bound of the sliced-off
+    subspace's worst input (1.0), i.e. callers serving normalized features
+    can pass their measured R instead.
+    """
+    from repro.core.spectral import spectral_norm
+
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    if tier_rank >= a.shape[-1]:
+        err = 0.0
+    else:
+        tail = a32[..., :, tier_rank:] @ b32[..., tier_rank:, :]
+        if tail.ndim > 2:  # stacked factors: certify the worst stacked slice
+            flat = tail.reshape((-1,) + tail.shape[-2:])
+            errs = [float(spectral_norm(flat[i], key)) for i in range(flat.shape[0])]
+            err = max(errs)
+        else:
+            err = float(spectral_norm(tail, key))
+    R = 1.0 if feature_radius is None else float(feature_radius)
+    return CompressionCertificate(
+        spectral_error=err,
+        feature_radius=R,
+        prob_deviation_bound=float(softmax_perturbation_bound(err, R)),
+        rank=int(tier_rank),
         q=q,
     )

@@ -15,6 +15,7 @@ training and serving paths.
 
 from __future__ import annotations
 
+import math
 from typing import Any, Mapping
 
 import jax
@@ -27,6 +28,8 @@ __all__ = [
     "param_count",
     "break_even_rank",
     "materialize",
+    "slice_rank",
+    "min_rank",
 ]
 
 
@@ -71,3 +74,61 @@ def materialize(p: Any) -> jax.Array:
         b32 = p["b"].astype(jnp.float32)
         return (a32 @ b32).astype(p["a"].dtype)
     return p
+
+
+def _sliced_rank(r: int, fraction: float) -> int:
+    return max(1, min(r, int(math.ceil(fraction * r))))
+
+
+def slice_rank(params: Any, fraction: float):
+    """Prefix-slice every factored leaf to ``ceil(fraction * rank)`` columns.
+
+    RSI orders singular directions by decreasing singular value, so the
+    factors are *nested*: the best rank-``r'`` approximation available from a
+    rank-``r`` factor pair is exactly the prefix slice ``A[..., :, :r']``,
+    ``B[..., :r', :]``.  One stored checkpoint therefore serves every cheaper
+    tier with zero extra memory — the slices are views taken at trace time.
+
+    Stacked factors (leading scan-layer / MoE-expert dims) slice on the same
+    trailing rank axis.  Dense leaves and non-factored subtrees pass through
+    untouched, so the result is a drop-in params pytree for the same model.
+    """
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"rank fraction must be in (0, 1], got {fraction}")
+    if fraction == 1.0:
+        return params
+
+    def walk(node: Any) -> Any:
+        if is_lowrank(node):
+            r = node["a"].shape[-1]
+            k = _sliced_rank(r, fraction)
+            out = dict(node)
+            out["a"] = node["a"][..., :, :k]
+            out["b"] = node["b"][..., :k, :]
+            return out
+        if isinstance(node, Mapping):
+            return {key: walk(val) for key, val in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def min_rank(params: Any) -> int:
+    """Smallest factored rank in the pytree (0 when nothing is factored)."""
+    ranks: list = []
+
+    def walk(node: Any) -> None:
+        if is_lowrank(node):
+            ranks.append(int(node["a"].shape[-1]))
+            return
+        if isinstance(node, Mapping):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return min(ranks) if ranks else 0

@@ -26,6 +26,19 @@ refcounted copy-on-write prompt-prefix sharing on top: repeated leading
 full pages (system-prompt traffic) are mapped read-only instead of
 re-allocated and re-prefilled.
 
+``--tiers 1.0,0.5`` arms elastic-rank serving on a compressed checkpoint:
+nested prefix slices of the SAME factors serve as cheaper fallback tiers,
+and ``--degrade-queue-depth`` / ``--degrade-free-frac`` let admission move
+new requests to a deeper tier under pressure instead of queueing them
+(each degraded response carries the tier's spectral-bound certificate).
+``--deadline-ms`` sheds waiters not admitted in time with a structured
+rejection; ``--preempt`` lets queue-head requests preempt lower-priority
+actives (their pages re-index as warm cache for bit-exact resume).
+
+SIGINT/SIGTERM drain gracefully: the queue is shed with ``"shutdown"``
+rejections, active slots decode to completion, and the summary still
+prints — a second signal kills the process as usual.
+
 Kernel backend selection goes through repro.runtime.dispatch: ``--kernels``
 overrides the arch config's ``kernels`` field, and the dispatcher's hit
 counters are printed after generation so you can see which path every linear
@@ -35,6 +48,7 @@ actually took.
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 
@@ -76,6 +90,30 @@ def main(argv=None):
                     help="0 = full vocab (continuous engine)")
     ap.add_argument("--compress-alpha", type=float, default=0.0)
     ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--tiers", default="",
+                    help="comma-separated rank fractions, first must be 1.0 "
+                    "(e.g. '1.0,0.5,0.25'): nested elastic-rank tiers served "
+                    "from prefix slices of the compressed factors "
+                    "(continuous engine; requires --compress-alpha)")
+    ap.add_argument("--tier-q", type=int, default=2,
+                    help="power iterations for the per-tier certificate probe")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="shed requests not ADMITTED within this many ms "
+                    "(structured rejection; 0 = no deadline)")
+    ap.add_argument("--degrade-queue-depth", type=int, default=0,
+                    help="queue depth at which admission degrades new "
+                    "requests to a deeper tier; 0 = disabled")
+    ap.add_argument("--degrade-free-frac", type=float, default=0.0,
+                    help="free-page fraction below which admission degrades "
+                    "new requests to a deeper tier; 0 = disabled")
+    ap.add_argument("--preempt", action="store_true",
+                    help="queue-head requests may preempt lower-priority "
+                    "actives; preempted K/V re-indexes as warm cache for "
+                    "bit-exact resume (requires --share-prefix)")
+    ap.add_argument("--close-sessions", action="store_true",
+                    help="after the run, drop each prompt's cached prefix "
+                    "branch (the session-close hook) and report freed pages "
+                    "(requires --share-prefix)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--kernels",
@@ -131,8 +169,16 @@ def main(argv=None):
         print("first sequences:", out[: min(2, args.batch), :12].tolist())
     else:
         from repro.serving import Engine, Request, SamplingParams
-        from repro.serving.engine import percentile
+        from repro.serving.engine import AdmissionPolicy, percentile
 
+        tiers = tuple(float(f) for f in args.tiers.split(",") if f) or None
+        admission = None
+        if args.deadline_ms > 0 or args.degrade_queue_depth > 0 or args.degrade_free_frac > 0:
+            admission = AdmissionPolicy(
+                n_tiers=len(tiers) if tiers else 1,
+                degrade_queue_depth=args.degrade_queue_depth or None,
+                degrade_free_frac=args.degrade_free_frac or None,
+            )
         n_slots = args.n_slots or args.batch
         eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg,
                      decode_block=args.decode_block,
@@ -140,7 +186,9 @@ def main(argv=None):
                      kv_pages=args.kv_pages or None,
                      prefill_chunk=args.prefill_chunk or None,
                      share_prefix=args.share_prefix,
-                     warm_cache_pages=args.warm_cache_pages or None)
+                     warm_cache_pages=args.warm_cache_pages or None,
+                     tiers=tiers, tier_q=args.tier_q,
+                     admission=admission, preempt=args.preempt)
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -153,17 +201,66 @@ def main(argv=None):
             reqs.append(Request(
                 prompt=np_batch["tokens"][b], max_new_tokens=args.gen,
                 sampling=sp, extras=extras,
+                deadline_ms=args.deadline_ms or None,
+                min_tier=(len(tiers) - 1) if tiers else 0,
             ))
+
+        # graceful drain: first SIGINT/SIGTERM sheds the queue and lets
+        # active slots decode to completion; default handling is restored
+        # afterwards so a SECOND signal kills the process as usual
+        draining = {"on": False}
+
+        def _drain(signum, frame):
+            draining["on"] = True
+            print(f"\n[drain] caught {signal.Signals(signum).name}: "
+                  "shedding the queue, finishing active slots")
+            for s, h in prev_handlers.items():
+                signal.signal(s, h)
+
+        prev_handlers = {}
+        for s in (signal.SIGINT, signal.SIGTERM):
+            try:
+                prev_handlers[s] = signal.signal(s, _drain)
+            except ValueError:  # not the main thread (tests)
+                break
+
         t0 = time.time()
-        done = eng.run(reqs)
+        try:
+            done = eng.run(reqs, stop=lambda: draining["on"])
+        finally:
+            for s, h in prev_handlers.items():
+                if signal.getsignal(s) == _drain:
+                    signal.signal(s, h)
         dt = time.time() - t0
+        ok = [r for r in done if r.status == "ok"]
+        shed = [r for r in done if r.status == "shed"]
+        errored = [r for r in done if r.status == "error"]
         n_tok = sum(len(r.tokens) for r in done)
         print(f"[continuous] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.1f} tok/s, slots={n_slots}, params {n0/1e6:.1f}M, "
               f"kernels={dcfg.backend})")
+        if shed or errored or admission is not None or tiers:
+            by_tier = [0] * (len(tiers) if tiers else 1)
+            for r in ok:
+                by_tier[r.tier] += 1
+            certs = " ".join(
+                f"t{i}<= {c.prob_deviation_bound:.3g}"
+                for i, c in enumerate(eng.tier_certificates)
+                if c is not None
+            )
+            print(f"[overload] ok={len(ok)} shed={len(shed)} "
+                  f"errored={len(errored)} "
+                  f"degraded={eng.degraded_admissions} "
+                  f"preemptions={eng.preemptions} "
+                  f"quarantined={eng.quarantined} "
+                  f"tier_counts={by_tier}" + (f" cert_bounds[{certs}]" if certs else ""))
+            for r in shed:
+                print(f"[shed] uid={r.rejected.uid} reason={r.rejected.reason} "
+                      f"waited={r.rejected.waited_ms:.0f}ms "
+                      f"queue_depth={r.rejected.queue_depth}")
         # a replay that completed ZERO requests has no percentiles —
         # report n/a instead of crashing on percentile([], ...)
-        lats = sorted(r.latency for r in done)
+        lats = sorted(r.latency for r in ok)
         lat_s = (
             f"p50={percentile(lats, 0.5)*1e3:.0f}ms "
             f"p95={percentile(lats, 0.95)*1e3:.0f}ms"
@@ -187,9 +284,14 @@ def main(argv=None):
                       f"prefill_tok_skipped={eng.skipped_prefill_tokens} "
                       f"cached_pages={eng.prefix_cached_pages} "
                       f"evictions={eng.prefix_evictions}")
-        if done:
-            out = np.asarray([done[0].tokens], np.int32)
-            print("first sequence:", done[0].tokens[:12])
+            if args.close_sessions and args.share_prefix:
+                freed = sum(eng.drop_session(r.prompt) for r in done)
+                print(f"[sessions] closed {len(done)}, freed {freed} cached "
+                      f"pages (cached now {eng.prefix_cached_pages})")
+        ok_done = ok if ok else done
+        if ok_done and ok_done[0].tokens:
+            out = np.asarray([ok_done[0].tokens], np.int32)
+            print("first sequence:", ok_done[0].tokens[:12])
         else:
             out = np.zeros((0, 0), np.int32)
 

@@ -109,6 +109,12 @@ class DispatchConfig:
                        (replaces the old static MAX_RANK/MAX_N constants)
     dense_min_tokens : flattened token count above which an over-break-even
                        rank is rematerialized to a dense GEMM
+    fused_min_rank : ranks BELOW this never take the fused Pallas path —
+                     elastic-rank tiers (core.lowrank.slice_rank) can slice
+                     factors down to rank 1-2, where the kernel's rank-tile
+                     grid is almost entirely padding and two thin XLA GEMMs
+                     win; each tier's program re-traces, so the same config
+                     routes each tier to its own best path
     interpret : force Pallas interpret mode; None = infer (non-TPU backends
                 cannot lower Pallas-TPU natively)
     """
@@ -117,6 +123,7 @@ class DispatchConfig:
     overrides: Tuple[Tuple[str, str], ...] = ()
     vmem_limit_bytes: int = DEFAULT_VMEM_LIMIT
     dense_min_tokens: int = 2048
+    fused_min_rank: int = 2
     interpret: Optional[bool] = None
 
     def __post_init__(self):
@@ -266,12 +273,17 @@ def choose_lowrank_path(
     nl, _L, M, K, r, N = _lowrank_dims(x_shape, a_shape, b_shape)
     be = config.backend_for("lowrank_matmul")
     fused = PATH_FUSED_BATCHED if nl else PATH_FUSED
-    fits = fused_vmem_bytes(r, N, dtype) <= config.vmem_limit_bytes
+    # rank floor: a prefix-sliced tier (core.lowrank.slice_rank) can carry
+    # rank 1-2 factors, where the fused kernel's rank tile is ~all padding
+    fits = (
+        fused_vmem_bytes(r, N, dtype) <= config.vmem_limit_bytes
+        and r >= config.fused_min_rank
+    )
 
     if be == "reference":
         return PATH_TWO_GEMM
     if be == "pallas":
-        # forced Pallas still may not oversubscribe VMEM
+        # forced Pallas still may not oversubscribe VMEM (or undershoot rank)
         return fused if fits else PATH_TWO_GEMM
     if be == "auto" and platform == "tpu" and fits:
         return fused

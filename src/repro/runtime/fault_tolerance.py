@@ -12,12 +12,18 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["StepWatchdog", "RetryableStep", "ElasticReshard", "TrainLoopRunner"]
+__all__ = [
+    "StepWatchdog",
+    "RetryableStep",
+    "ElasticReshard",
+    "TrainLoopRunner",
+    "FaultInjector",
+]
 
 
 @dataclasses.dataclass
@@ -72,6 +78,78 @@ class RetryableStep:
                 if attempt == self.max_retries:
                     raise
         raise AssertionError("unreachable")
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault injection for the serving engine (tests and
+    ``benchmarks/serving.py --inject``).
+
+    Three fault classes, each armed independently:
+
+    ``nan_logits = (uid, device_step)`` — poison request ``uid``'s logits
+    to NaN at global decode step ``device_step`` (the engine's cumulative
+    ``steps`` counter).  The poison rides two runtime scalars through the
+    jitted fused block — same compiled program armed or not — so the
+    engine's per-slot non-finite QUARANTINE path is exercised exactly as
+    a real numerical blow-up would: the poisoned slot freezes and errors,
+    the rest of the batch keeps decoding.
+
+    ``deny_pages = (start, stop)`` — every page reservation issued during
+    engine steps ``[start, stop)`` fails, simulating pool exhaustion:
+    admissions queue, deadlines expire, preemption triggers.
+
+    ``slow_steps = (start, stop)`` with ``slow_ms`` — sleep before each
+    engine step in the window, simulating a straggling device so
+    wall-clock deadlines expire under load.
+
+    ``fired`` counts what actually triggered, so a test that armed a
+    fault can assert the fault genuinely happened.
+    """
+
+    nan_logits: Optional[Tuple[int, int]] = None
+    deny_pages: Optional[Tuple[int, int]] = None
+    slow_steps: Optional[Tuple[int, int]] = None
+    slow_ms: float = 0.0
+    fired: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def _hit(self, kind: str) -> None:
+        self.fired[kind] = self.fired.get(kind, 0) + 1
+
+    def deny_reserve(self, step_idx: int) -> bool:
+        """True when page reservations must fail at engine step ``step_idx``."""
+        if self.deny_pages is None:
+            return False
+        a, b = self.deny_pages
+        if a <= step_idx < b:
+            self._hit("deny_pages")
+            return True
+        return False
+
+    def on_step(self, step_idx: int) -> None:
+        """Engine-step hook: applies the slow-step fault when armed."""
+        if self.slow_steps is None or self.slow_ms <= 0:
+            return
+        a, b = self.slow_steps
+        if a <= step_idx < b:
+            self._hit("slow_step")
+            time.sleep(self.slow_ms / 1e3)
+
+    def poison_for(self, uid_of_slot: Callable[[int], Optional[int]],
+                   n_slots: int, steps_done: int, block: int) -> Tuple[int, int]:
+        """Resolve the NaN fault to (slot, step-within-block) for the next
+        fused block, or (-1, -1) when it does not land in this block."""
+        if self.nan_logits is None:
+            return -1, -1
+        uid, at_step = self.nan_logits
+        rel = at_step - steps_done
+        if not (0 <= rel < block):
+            return -1, -1
+        for s in range(n_slots):
+            if uid_of_slot(s) == uid:
+                self._hit("nan_logits")
+                return s, rel
+        return -1, -1
 
 
 @dataclasses.dataclass

@@ -71,13 +71,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bounds import CompressionCertificate, certify_tier
+from repro.core.lowrank import is_lowrank, slice_rank
 from repro.runtime.dispatch import DispatchConfig, use_dispatch
+from repro.runtime.fault_tolerance import FaultInjector
 from repro.serving.sampling import (
     SALT_MULT,
     SamplingParams,
@@ -85,14 +88,24 @@ from repro.serving.sampling import (
     token_salts,
 )
 from repro.serving.scheduler import (
+    AdmissionPolicy,
     PageAllocator,
     PageGrant,
     PrefixIndex,
+    RejectedOverload,
     Scheduler,
     SlotAllocator,
 )
 
-__all__ = ["Request", "Engine", "SamplingParams", "percentile"]
+__all__ = [
+    "Request",
+    "Engine",
+    "SamplingParams",
+    "AdmissionPolicy",
+    "RejectedOverload",
+    "FaultInjector",
+    "percentile",
+]
 
 
 def percentile(sorted_vals, frac: float):
@@ -124,6 +137,11 @@ class Request:
     max_new_tokens: int
     sampling: SamplingParams = SamplingParams()
     extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    # overload / QoS contract (all optional; defaults reproduce plain FIFO):
+    deadline_ms: Optional[float] = None  # shed if not admitted within this
+    min_tier: int = 0  # deepest rank tier the client accepts under pressure
+    tier: int = 0  # tier actually served (admission may raise, never lower)
+    priority: int = 0  # higher-priority waiters may preempt lower actives
     # filled in by the engine:
     uid: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -131,6 +149,13 @@ class Request:
     t_first: float = 0.0
     t_done: float = 0.0
     prefill_skipped: int = 0  # prompt tokens covered by shared prefix pages
+    status: str = "ok"  # "ok" | "shed" | "error"
+    rejected: Optional[RejectedOverload] = None  # set when status == "shed"
+    error: Optional[str] = None  # set when status == "error"
+    certificate: Optional[CompressionCertificate] = None  # served tier's bound
+    # preemption internals: a resumed continuation points at the original
+    # request, whose token stream it extends (never set by callers)
+    _parent: Optional["Request"] = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -325,6 +350,11 @@ class Engine:
         prefill_chunk: Optional[int] = None,
         share_prefix: bool = False,
         warm_cache_pages: Optional[int] = None,
+        tiers: Optional[Sequence[float]] = None,
+        tier_q: int = 0,
+        admission: Optional[AdmissionPolicy] = None,
+        injector: Optional[FaultInjector] = None,
+        preempt: bool = False,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
@@ -334,6 +364,34 @@ class Engine:
             raise ValueError(f"decode_block must be >= 1, got {decode_block}")
         self.decode_block = decode_block
         self._dcfg = dispatch if dispatch is not None else DispatchConfig.from_arch(self.cfg)
+
+        # ---- elastic rank tiers (nested prefix slices of one checkpoint) --
+        tiers = tuple(float(f) for f in tiers) if tiers else (1.0,)
+        if tiers[0] != 1.0:
+            raise ValueError(f"tiers[0] must be 1.0 (the serving rank), got {tiers}")
+        if any(not 0.0 < f <= 1.0 for f in tiers) or any(
+            a <= b for a, b in zip(tiers, tiers[1:])
+        ):
+            raise ValueError(f"tiers must be strictly decreasing in (0, 1]: {tiers}")
+        if len(tiers) > 1 and self.cfg.family in _EXACT_LEN_FAMILIES:
+            # recurrent state rows of frozen slots DRIFT during another
+            # tier's fused pass (re-fed tokens integrate into the state),
+            # so multi-tier decode would corrupt live recurrent slots —
+            # attention K/V is rewritten before it is read, recurrent
+            # state is not
+            raise ValueError(
+                f"multi-tier serving is not supported for the "
+                f"{self.cfg.family} family (recurrent decode state)"
+            )
+        self.tiers = tiers
+        # tier 0 aliases the stored params; every other tier is a trace-time
+        # prefix slice — zero extra parameter memory, one jitted program per
+        # tier (jit re-traces per sliced shape through the same callables)
+        self._tier_params = [params] + [slice_rank(params, f) for f in tiers[1:]]
+        self.tier_certificates = self._build_tier_certificates(tier_q)
+        self.admission = admission
+        self.injector = injector
+        self.preempt = preempt
 
         self.paged = page_size is not None
         self.page_size = page_size
@@ -371,7 +429,12 @@ class Engine:
             self._share = (
                 share_prefix and self._has_pages and model.prefill_chunk is not None
             )
-            self._prefix = PrefixIndex(page_size) if self._share else None
+            # ONE index per tier: a page's K/V bytes depend on the params
+            # that computed them, so the same tokens served at different
+            # ranks must never alias pages across tiers
+            self._prefix = (
+                [PrefixIndex(page_size) for _ in self.tiers] if self._share else None
+            )
             # one chunk shape for BOTH long-prompt chunking and shared-tail
             # prefill (two C values would compile two chunk programs)
             self._chunk_C = (
@@ -391,6 +454,8 @@ class Engine:
                 SlotAllocator(n_slots),
                 reserve=self._reserve,
                 release_grant=self._release_grant,
+                policy=admission,
+                pressure=self._free_page_frac,
             )
         else:
             self.kv_pages = self.max_pages = 0
@@ -400,7 +465,7 @@ class Engine:
             self._prefix = None
             self._chunk_C = None
             self.page_pool = None
-            self.scheduler = Scheduler(SlotAllocator(n_slots))
+            self.scheduler = Scheduler(SlotAllocator(n_slots), policy=admission)
             with use_dispatch(self._dcfg):
                 self.cache = model.init_cache(n_slots, max_len)
         # byte accounting: paged leaves are banked per PAGE, everything else
@@ -459,6 +524,62 @@ class Engine:
         # prompt tokens admissions did NOT have to re-prefill because the
         # matched prefix's K/V was already resident (sum of grant.start)
         self.skipped_prefill_tokens = 0
+        # overload/robustness accounting
+        self.preemptions = 0  # slots preempted for higher-priority waiters
+        self.quarantined = 0  # requests errored out on non-finite logits
+        self._step_idx = 0  # engine step() invocations (injector clock)
+
+    def _free_page_frac(self) -> float:
+        """Free-page fraction in [0, 1] — the admission policy's pressure
+        signal (1.0 for flat/zero-page engines: no page pressure exists)."""
+        if not self.paged or self.kv_pages == 0:
+            return 1.0
+        return self.page_pool.n_free / self.kv_pages
+
+    def _build_tier_certificates(self, tier_q: int):
+        """Per-tier Thm-3.2 certificates off the compressed LM head.
+
+        The certified quantity is the softmax deviation the TIER introduces
+        over the stored serving rank: the spectral norm of the factor tail
+        each slice drops.  Head-less or uncompressed checkpoints get a
+        zero-error certificate (slicing them is the identity).
+        """
+        if len(self.tiers) == 1:
+            return [None]
+        head = None
+
+        def walk(node):
+            nonlocal head
+            if is_lowrank(node):
+                a, b = node["a"], node["b"]
+                # prefer the classifier head (projects to vocab, 2-D); else
+                # keep the widest factor pair as the certified proxy layer
+                if b.ndim == 2 and b.shape[-1] == self.cfg.vocab:
+                    head = (a, b, True)
+                elif head is None or (not head[2] and a.size > head[0].size):
+                    head = (a, b, False)
+                return
+            if isinstance(node, dict):
+                for v in node.values():
+                    walk(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    walk(v)
+
+        walk(self.params)
+        certs = []
+        key = jax.random.PRNGKey(0)
+        for f in self.tiers:
+            if head is None:
+                certs.append(
+                    CompressionCertificate(0.0, 1.0, 0.0, rank=0, q=tier_q)
+                )
+                continue
+            a, b, _ = head
+            r = a.shape[-1]
+            k = max(1, min(r, int(math.ceil(f * r))))
+            certs.append(certify_tier(a, b, k, key, q=tier_q))
+        return certs
 
     # ------------------------------------------------------------------ #
     # submission / introspection
@@ -483,6 +604,8 @@ class Engine:
         (refcounts); zero-page archs get an EMPTY grant, which is a real
         admission — only ``None`` means exhaustion.
         """
+        if self.injector is not None and self.injector.deny_reserve(self._step_idx):
+            return None  # injected pool exhaustion: admission queues/sheds
         need = self._page_need(request)
         L = int(request.prompt.size)
         peak0 = self.page_pool.peak_used  # restored if this transaction fails
@@ -490,7 +613,7 @@ class Engine:
         # L >= 2 keeps the mid-prompt entry at start >= 1: a fully-matched
         # single-token prompt would otherwise degenerate to start == 0
         if self._share and L >= 2:
-            for p in self._prefix.match(request.prompt):
+            for p in self._prefix[request.tier].match(request.prompt):
                 if len(acquired) >= need or not self.page_pool.acquire(p):
                     break
                 acquired.append(p)
@@ -544,6 +667,10 @@ class Engine:
             self.shared_page_hits += grant.n_shared
             self.skipped_prefill_tokens += grant.start
             request.prefill_skipped = grant.start
+            # credit the matched pages' warm-cache value ONLY on a grant
+            # that sticks — a starved head-of-queue retry acquires and
+            # rolls back every step and must not inflate eviction scores
+            self.page_pool.record_saved(acquired[: grant.n_shared])
         return grant
 
     def _on_evict(self, pages: List[int]) -> None:
@@ -551,7 +678,8 @@ class Engine:
         to a writer (or swept by the cache budget), so its index keys must
         die in the same operation — no stale ``match`` hits."""
         if self._prefix is not None:
-            self._prefix.drop_pages(pages)
+            for index in self._prefix:
+                index.drop_pages(pages)
 
     def _release_grant(self, grant: PageGrant) -> None:
         """Drop one reference on every page the grant holds (Scheduler
@@ -571,7 +699,8 @@ class Engine:
         bookkeeping is flushed in the same operation (without counting
         evictions: this is a policy reset, not cache pressure)."""
         if self._prefix is not None:
-            self._prefix.clear()
+            for index in self._prefix:
+                index.clear()
             self.page_pool.flush_cache()
 
     def submit(self, request: Request) -> Request:
@@ -682,19 +811,35 @@ class Engine:
     # admission + prefill
     # ------------------------------------------------------------------ #
     def _admission_groups(self, placed):
-        """Split (slot, req) placements into prefill micro-batches."""
-        exact = self.cfg.family in _EXACT_LEN_FAMILIES
-        if not exact and self.cfg.sliding_window is not None and placed:
-            # SWA ring layout rotates by the PADDED length once it exceeds
-            # the window — shorter requests in the pad would land in wrong
-            # ring slots, so fall back to exact-length grouping there.
-            exact = max(req.prompt.size for _, req in placed) > self.cfg.sliding_window
-        if exact:
-            by_len: Dict[int, list] = {}
-            for slot, req in placed:
-                by_len.setdefault(req.prompt.size, []).append((slot, req))
-            return list(by_len.values())
-        return [placed]
+        """Split (slot, req) placements into prefill micro-batches.
+
+        A micro-batch runs ONE prefill program with ONE params pytree, so
+        placements split by TIER first (each tier's sliced factors are a
+        distinct pytree), then by the family's shape constraints.
+        """
+        by_tier: Dict[int, list] = {}
+        for slot, req in placed:
+            by_tier.setdefault(req.tier, []).append((slot, req))
+        groups = []
+        for tier in sorted(by_tier):
+            tier_placed = by_tier[tier]
+            exact = self.cfg.family in _EXACT_LEN_FAMILIES
+            if not exact and self.cfg.sliding_window is not None:
+                # SWA ring layout rotates by the PADDED length once it
+                # exceeds the window — shorter requests in the pad would
+                # land in wrong ring slots, so group by exact length there.
+                exact = (
+                    max(req.prompt.size for _, req in tier_placed)
+                    > self.cfg.sliding_window
+                )
+            if exact:
+                by_len: Dict[int, list] = {}
+                for slot, req in tier_placed:
+                    by_len.setdefault(req.prompt.size, []).append((slot, req))
+                groups.extend(by_len.values())
+            else:
+                groups.append(tier_placed)
+        return groups
 
     def _prefill_shape(self, n_reqs: int, max_prompt: int):
         """Bucket the micro-batch shape so live traffic triggers a BOUNDED
@@ -729,8 +874,11 @@ class Engine:
             batch[name] = jnp.asarray(np.stack(rows))
 
         padded_reqs = reqs + [None] * (G - len(reqs))
+        tier = reqs[0].tier  # _admission_groups splits by tier
         with use_dispatch(self._dcfg):
-            logits, part = self._prefill_jit(self.params, batch, jnp.asarray(last_index))
+            logits, part = self._prefill_jit(
+                self._tier_params[tier], batch, jnp.asarray(last_index)
+            )
             if self.paged:
                 # dummy rows (and each slot's unallocated table tail) scatter
                 # to the trash page; allocated pages are fully overwritten
@@ -749,7 +897,9 @@ class Engine:
                     # landed on device yet — same-round admissions simply
                     # miss the sharing opportunity once
                     for slot, req in group:
-                        backing = self._prefix.register(req.prompt, self._bt[slot])
+                        backing = self._prefix[req.tier].register(
+                            req.prompt, self._bt[slot]
+                        )
                         self.page_pool.mark_indexed(backing)
             else:
                 self.cache = _scatter_slots(self.cache, part, slots, self.n_slots)
@@ -776,6 +926,7 @@ class Engine:
         self._seeds[slot] = _seed32(req.sampling.seed)
         self._temps[slot] = req.sampling.temperature
         self._topks[slot] = req.sampling.top_k
+        req.certificate = self.tier_certificates[req.tier]
         req.t_first = now
         req.tokens.append(first_tok)
 
@@ -806,6 +957,44 @@ class Engine:
         )
         return np.asarray(out)
 
+    def _clear_slot(self, slot: int) -> None:
+        """Reset one slot's host mirrors and hand it back to the scheduler
+        (the shared tail of finish / preempt / quarantine)."""
+        self._reqs[slot] = None
+        self._pos[slot] = 0
+        self._tokens[slot, 0] = 0
+        self._active[slot] = False
+        self._emitted[slot] = 0
+        self._max_new[slot] = 0
+        self._seeds[slot] = 0
+        self._topks[slot] = 0
+        self._temps[slot] = 0.0
+        self.scheduler.release(slot)
+        if self.paged:
+            # Compact the table row back to all-trash BEFORE the next
+            # device launch: the freed pages may be re-granted to another
+            # slot, and a stale row would let this (now inactive) slot's
+            # idempotent re-writes land in pages it no longer owns.
+            self._bt[slot] = self._trash
+            self._bt_dirty = True
+
+    def _finalize(self, req: Request) -> Request:
+        """Fold a finished CONTINUATION back into its original request.
+
+        A preempted request's client holds the ORIGINAL object; the
+        continuation's tokens extend its stream and its terminal state
+        (timestamps, status) transfers, so callers never see the internal
+        re-queue.  Non-continuations pass through untouched.
+        """
+        root = req._parent
+        if root is None:
+            return req
+        root.tokens.extend(req.tokens)
+        root.t_done = req.t_done
+        root.status = req.status
+        root.error = req.error
+        return root
+
     def _maybe_finish(self, slot: int) -> Optional[Request]:
         req = self._reqs[slot]
         if req is None:
@@ -813,15 +1002,6 @@ class Engine:
         hit_eos = self.eos_token is not None and req.tokens and req.tokens[-1] == self.eos_token
         if req.done or hit_eos:
             req.t_done = time.perf_counter()
-            self._reqs[slot] = None
-            self._pos[slot] = 0
-            self._tokens[slot, 0] = 0
-            self._active[slot] = False
-            self._emitted[slot] = 0
-            self._max_new[slot] = 0
-            self._seeds[slot] = 0
-            self._topks[slot] = 0
-            self._temps[slot] = 0.0
             if self._share:
                 # Register the DECODE-FILLED pages before the slot releases:
                 # a follow-up turn whose prompt extends (prompt + reply)
@@ -841,19 +1021,12 @@ class Engine:
                 full_end = (seq.size // self.page_size) * self.page_size
                 if full_end > req.prompt.size:
                     self._rematerialize(
-                        slot, seq, int(req.prompt.size), full_end
+                        slot, seq, int(req.prompt.size), full_end, req.tier
                     )
-                backing = self._prefix.register(seq, self._bt[slot])
+                backing = self._prefix[req.tier].register(seq, self._bt[slot])
                 self.page_pool.mark_indexed(backing)
-            self.scheduler.release(slot)
-            if self.paged:
-                # Compact the table row back to all-trash BEFORE the next
-                # device launch: the freed pages may be re-granted to another
-                # slot, and a stale row would let this (now inactive) slot's
-                # idempotent re-writes land in pages it no longer owns.
-                self._bt[slot] = self._trash
-                self._bt_dirty = True
-            return req
+            self._clear_slot(slot)
+            return self._finalize(req)
         return None
 
     def _sync_block_table(self):
@@ -924,7 +1097,7 @@ class Engine:
             )
         with use_dispatch(self._dcfg):
             logits, self.cache = self._chunk_jit(
-                self.params,
+                self._tier_params[req.tier],
                 self.cache,
                 jnp.asarray(toks),
                 jnp.asarray(row),
@@ -944,14 +1117,16 @@ class Engine:
         if self._share:
             # the prompt's full pages are now completely written on device:
             # safe to offer them to future admissions
-            backing = self._prefix.register(req.prompt, row)
+            backing = self._prefix[req.tier].register(req.prompt, row)
             self.page_pool.mark_indexed(backing)
         first = self._sample(logits, [req], [0])
         self._activate_slot(slot, req, plen, int(first[0]), time.perf_counter())
         done = self._maybe_finish(slot)
         return ([done] if done is not None else []), n
 
-    def _rematerialize(self, slot: int, seq: np.ndarray, start: int, end: int):
+    def _rematerialize(
+        self, slot: int, seq: np.ndarray, start: int, end: int, tier: int = 0
+    ):
         """Rewrite positions ``[start, end)`` of the slot's pages through
         the (1, C) chunk-prefill program, discarding the logits.
 
@@ -984,7 +1159,7 @@ class Engine:
             toks[0, :n] = seq[start : start + n]
             with use_dispatch(self._dcfg):
                 _, self.cache = self._chunk_jit(
-                    self.params,
+                    self._tier_params[tier],
                     self.cache,
                     jnp.asarray(toks),
                     jnp.asarray(row),
@@ -1020,10 +1195,19 @@ class Engine:
         n_steps = self.decode_block
         eos = _NO_EOS if self.eos_token is None else int(self.eos_token)
 
-        def fused(params, cache, tokens, pos, active, emitted, max_new, seeds, temps, topks, base_key):
-            def body(carry, _):
-                cache, tokens, pos, active, emitted = carry
+        def fused(params, cache, tokens, pos, active, emitted, max_new, seeds,
+                  temps, topks, base_key, poison_slot, poison_rel):
+            sids = jnp.arange(tokens.shape[0], dtype=jnp.int32)
+
+            def body(carry, i):
+                cache, tokens, pos, active, emitted, quar = carry
                 logits, cache = model.decode_step(params, cache, tokens, pos)
+                # fault injection rides two runtime scalars ((-1, -1) when
+                # unarmed selects nothing) — the compiled program is
+                # byte-identical armed or not, so injection tests exercise
+                # exactly the production quarantine path
+                hit = (sids == poison_slot) & (i == poison_rel)
+                logits = jnp.where(hit[:, None], jnp.nan, logits)
                 if greedy:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 else:
@@ -1032,21 +1216,29 @@ class Engine:
                     nxt = sample_tokens(
                         logits, base_key, token_salts(seeds, emitted), temps, topks
                     )
+                # QUARANTINE: a slot whose logits went non-finite freezes
+                # THIS step — the garbage token is never emitted, never fed
+                # back, and the rest of the batch keeps decoding.  The host
+                # drain errors the request out after the block.
+                bad = active & ~jnp.isfinite(logits).all(axis=-1)
+                quar = quar | bad
+                emit = active & ~bad
                 # frozen slots re-feed their last token at their frozen
                 # position (idempotent cache rewrite, masked out of emits)
-                nxt = jnp.where(active, nxt, tokens[:, 0])
-                emit = active
-                step = active.astype(jnp.int32)
+                nxt = jnp.where(emit, nxt, tokens[:, 0])
+                step = emit.astype(jnp.int32)
                 pos = pos + step
                 emitted = emitted + step
-                active = active & (emitted < max_new) & (nxt != eos)
-                return (cache, nxt[:, None], pos, active, emitted), (nxt, emit)
+                active = emit & (emitted < max_new) & (nxt != eos)
+                return (cache, nxt[:, None], pos, active, emitted, quar), (nxt, emit)
 
             carry, (toks, emits) = jax.lax.scan(
-                body, (cache, tokens, pos, active, emitted), None, length=n_steps
+                body,
+                (cache, tokens, pos, active, emitted, jnp.zeros_like(active)),
+                jnp.arange(n_steps, dtype=jnp.int32),
             )
-            cache, tokens, pos, active, emitted = carry
-            return cache, tokens, pos, active, emitted, toks, emits
+            cache, tokens, pos, active, emitted, quar = carry
+            return cache, tokens, pos, active, emitted, quar, toks, emits
 
         fn = jax.jit(fused, donate_argnums=(1, 2, 3, 4, 5))
         self._fused_cache[greedy] = fn
@@ -1062,8 +1254,16 @@ class Engine:
         tokens per active slot with a single host round-trip); returns the
         requests that finished during this step."""
         finished: List[Request] = []
+        self._step_idx += 1
+        if self.injector is not None:
+            self.injector.on_step(self._step_idx)
 
         placed = self.scheduler.admit()
+        if self.preempt:
+            placed.extend(self._preempt_for_waiters())
+        # deadline-expired waiters shed by admission surface as finished
+        # requests with status "shed" and a structured rejection attached
+        finished.extend(self.scheduler.drain_shed())
         if placed:
             # page peaks are tracked INSIDE the allocator at every
             # allocation-changing site; only the admitted-request peak is
@@ -1126,9 +1326,29 @@ class Engine:
 
         if not self._active.any():
             return finished
-        self._sync_block_table()
 
-        greedy = not (self._temps[self._active] > 0).any()
+        # One fused pass per distinct ACTIVE tier: a pass's params must
+        # match every row it advances, so other tiers' slots ride along
+        # FROZEN (masked inactive).  Their idempotent K/V re-feeds do land
+        # with this pass's params — wrong bytes at their frozen position —
+        # but each such slot's own next active decode REWRITES that
+        # position with its tier's params before anything attends to it
+        # (write-before-read), so attention-family state self-repairs;
+        # recurrent families are rejected at construction.  Single-tier
+        # engines take exactly one pass — the PR-4 hot path unchanged.
+        slot_tiers = np.array(
+            [r.tier if r is not None else 0 for r in self._reqs], np.int32
+        )
+        poison_slot, poison_rel = self._poison_for()
+        for tier in sorted({int(t) for t in slot_tiers[self._active]}):
+            mask = self._active & (slot_tiers == tier)
+            finished.extend(self._fused_pass(tier, mask, poison_slot, poison_rel))
+        return finished
+
+    def _fused_pass(self, tier, mask, poison_slot, poison_rel) -> List[Request]:
+        """Run one fused decode block over the slots in ``mask`` (one tier)."""
+        self._sync_block_table()
+        greedy = not (self._temps[mask] > 0).any()
         fused = self._fused_fn(greedy)
         with use_dispatch(self._dcfg):
             (
@@ -1137,44 +1357,194 @@ class Engine:
                 pos_d,
                 active_d,
                 emitted_d,
+                quar_d,
                 toks_d,
                 emits_d,
             ) = fused(
-                self.params,
+                self._tier_params[tier],
                 self.cache,
                 jnp.asarray(self._tokens),
                 jnp.asarray(self._pos),
-                jnp.asarray(self._active),
+                jnp.asarray(mask),
                 jnp.asarray(self._emitted),
                 jnp.asarray(self._max_new),
                 jnp.asarray(self._seeds),
                 jnp.asarray(self._temps),
                 jnp.asarray(self._topks),
                 self._base_key,
+                jnp.int32(poison_slot),
+                jnp.int32(poison_rel),
             )
         # THE host sync for this block: drain the (n_steps, n_slots) emit
         # stack plus the final per-slot state in one transfer batch.
         toks = np.asarray(toks_d)
         emits = np.asarray(emits_d)
-        # np.array (not asarray): the mirrors are host-MUTABLE at admission /
-        # finish boundaries, and asarray of a device buffer is read-only
-        self._tokens = np.array(tokens_d)
-        self._pos = np.array(pos_d)
-        self._active = np.array(active_d)
-        self._emitted = np.array(emitted_d)
+        quar = np.asarray(quar_d)
+        # merge ONLY this pass's rows into the host mirrors: rows of other
+        # tiers were masked inactive for this pass, and their final device
+        # "active" (False) must not clobber the real liveness state
+        self._tokens[mask] = np.asarray(tokens_d)[mask]
+        self._pos[mask] = np.asarray(pos_d)[mask]
+        self._active[mask] = np.asarray(active_d)[mask]
+        self._emitted[mask] = np.asarray(emitted_d)[mask]
         self.steps += self.decode_block
         self.host_syncs += 1
         self.decoded_tokens += int(emits.sum())
 
-        for s in np.nonzero(emits.any(axis=0))[0]:
+        finished: List[Request] = []
+        for s in np.nonzero(emits.any(axis=0) | quar)[0]:
+            s = int(s)
             req = self._reqs[s]
             for tok, emit in zip(toks[:, s], emits[:, s]):
                 if emit:
                     req.tokens.append(int(tok))
-            done = self._maybe_finish(int(s))
+            if quar[s]:
+                finished.append(self._quarantine_slot(s))
+                continue
+            done = self._maybe_finish(s)
             if done is not None:
                 finished.append(done)
         return finished
+
+    # ------------------------------------------------------------------ #
+    # overload machinery: preemption, quarantine, session close
+    # ------------------------------------------------------------------ #
+    @property
+    def degraded_admissions(self) -> int:
+        """Admissions the policy moved to a cheaper tier under pressure."""
+        return self.scheduler.degraded
+
+    def _poison_for(self):
+        """Resolve the injector's NaN fault to (slot, step-within-block)
+        for the next fused block; (-1, -1) selects nothing."""
+        if self.injector is None:
+            return -1, -1
+        return self.injector.poison_for(
+            lambda s: self._reqs[s].uid if self._reqs[s] is not None else None,
+            self.n_slots,
+            self.steps,
+            self.decode_block,
+        )
+
+    def _pick_victim(self, head) -> Optional[int]:
+        """Cheapest active slot strictly outranked by the queue head:
+        lowest priority first, then fewest emitted tokens (least sunk
+        work), then slot id (deterministic traces).  Mid-chunking slots
+        are never victims (their pages are half-written)."""
+        best, key = None, None
+        for s in range(self.n_slots):
+            req = self._reqs[s]
+            if req is None or not self._active[s] or s in self._chunking:
+                continue
+            if req.priority >= head.priority:
+                continue
+            k = (req.priority, int(self._emitted[s]), s)
+            if key is None or k < key:
+                best, key = s, k
+        return best
+
+    def _preempt_for_waiters(self):
+        """While the queue head outranks a running request, preempt the
+        cheapest victim and retry admission.  Stops the moment an eviction
+        fails to admit anyone (freeing more victims could not help: pages
+        come back as warm cache, not free pages, until evicted — and the
+        continuation re-queues right behind the preemptor anyway)."""
+        placed = []
+        while self.scheduler.queue:
+            victim = self._pick_victim(self.scheduler.queue[0])
+            if victim is None:
+                break
+            self._preempt_slot(victim)
+            more = self.scheduler.admit()
+            if not more:
+                break
+            placed.extend(more)
+        return placed
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict one running request, preserving its work.
+
+        Its decode-filled FULL pages go through the standard release path
+        — rematerialized through the prefill program and registered in the
+        tier's prefix index — so the re-queued continuation's admission
+        matches them read-only and prefills ONLY the unshared tail (plus
+        the partial last page).  The continuation extends the original
+        request's stream under the original uid/submit-time/tier, queued
+        right behind the preemptor (index 1): under greedy decoding the
+        resumed stream is bit-identical to an uninterrupted run, because
+        prefilling the extended prompt reproduces the same argmax chain.
+        Sampled (temperature > 0) streams resume with a fresh salt chain —
+        preemption guarantees greedy parity, not sampled-stream parity.
+        """
+        req = self._reqs[slot]
+        if self._share and len(req.tokens) > 1:
+            seq = np.concatenate([req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            full_end = (seq.size // self.page_size) * self.page_size
+            if full_end > req.prompt.size:
+                self._rematerialize(
+                    slot, seq, int(req.prompt.size), full_end, req.tier
+                )
+            backing = self._prefix[req.tier].register(seq, self._bt[slot])
+            self.page_pool.mark_indexed(backing)
+        self._clear_slot(slot)
+        root = req._parent if req._parent is not None else req
+        if req._parent is not None:
+            # fold this segment's tokens into the root NOW — the next
+            # continuation starts a fresh token list of its own
+            root.tokens.extend(req.tokens)
+        cont = Request(
+            prompt=np.concatenate([req.prompt, np.asarray(req.tokens, np.int32)]),
+            max_new_tokens=req.max_new_tokens - len(req.tokens),
+            sampling=req.sampling,
+            extras=req.extras,
+            deadline_ms=req.deadline_ms,
+            min_tier=req.min_tier,
+            tier=req.tier,
+            priority=req.priority,
+        )
+        cont.uid = req.uid
+        cont.t_submit = req.t_submit
+        cont._parent = root
+        self.scheduler.queue.insert(1, cont)
+        self.preemptions += 1
+
+    def _quarantine_slot(self, slot: int) -> Request:
+        """Error-out one request whose decode went non-finite.
+
+        The fused block froze the row the moment the bad logits appeared,
+        so no garbage token was emitted or fed back, and the REST of the
+        batch kept decoding unaffected.  The request's pages are NEVER
+        registered in the prefix index — possibly-poisoned K/V must not
+        back a future match — they just free for clean reuse.
+        """
+        req = self._reqs[slot]
+        req.t_done = time.perf_counter()
+        req.status = "error"
+        req.error = "non-finite logits during decode"
+        self._clear_slot(slot)
+        self.quarantined += 1
+        return self._finalize(req)
+
+    def drop_session(self, prompt) -> int:
+        """Close an abandoned conversation branch NOW: drop its prefix-index
+        chain (every tier) plus all registered extensions, and release the
+        matching warm-cache pages for clean reuse — instead of waiting for
+        LRU pressure to reclaim them.  Returns cached pages freed."""
+        if self._prefix is None:
+            return 0
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        freed = 0
+        for index in self._prefix:
+            freed += self.page_pool.drop_cached(index.drop_branch(prompt))
+        return freed
+
+    def shed_queue(self, reason: str = "shutdown") -> List[Request]:
+        """Shed every QUEUED (never admitted) request with a structured
+        rejection; in-flight slots are untouched.  The graceful-shutdown
+        primitive: stop admitting, finish what is running."""
+        while self.scheduler.queue:
+            self.scheduler.shed_request(self.scheduler.queue.popleft(), reason)
+        return self.scheduler.drain_shed()
 
     # ------------------------------------------------------------------ #
     # convenience drain loop
@@ -1185,6 +1555,7 @@ class Engine:
         arrivals: Optional[Sequence[float]] = None,
         *,
         max_idle_wait: float = 0.05,
+        stop: Optional[Callable[[], bool]] = None,
     ) -> List[Request]:
         """Submit ``requests`` (optionally at wall-clock ``arrivals`` offsets,
         seconds) and step until all complete.  Returns them in finish order.
@@ -1194,12 +1565,22 @@ class Engine:
         ``max_idle_wait`` seconds per nap, so ``has_work`` transitions from
         concurrent ``submit()`` callers are noticed promptly and a long gap
         neither busy-spins nor oversleeps past new work.
+
+        ``stop`` (optional) is polled once per loop; the first True begins
+        a GRACEFUL DRAIN: not-yet-submitted requests are dropped, queued
+        ones shed with a structured ``"shutdown"`` rejection, and every
+        in-flight slot decodes to completion before the loop returns — the
+        SIGINT contract of launch/serve.py.
         """
         order = sorted(range(len(requests)), key=lambda i: arrivals[i] if arrivals else 0)
         t0 = time.perf_counter()
         pending = list(order)
         finished: List[Request] = []
         while pending or self.has_work:
+            if stop is not None and stop():
+                pending.clear()
+                finished.extend(self.shed_queue("shutdown"))
+                stop = None  # drained once; keep stepping in-flight slots
             now = time.perf_counter() - t0
             while pending and (arrivals is None or arrivals[pending[0]] <= now):
                 self.submit(requests[pending[0]])

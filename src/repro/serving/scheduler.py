@@ -50,6 +50,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import time
 from typing import Callable, Deque, Iterator, List, Optional, Tuple
 
 import numpy as np
@@ -60,6 +61,8 @@ __all__ = [
     "PageGrant",
     "PrefixIndex",
     "Scheduler",
+    "AdmissionPolicy",
+    "RejectedOverload",
 ]
 
 
@@ -182,6 +185,12 @@ class PageAllocator:
         # LRU-ordered cached pages (ref 0, contents indexed): oldest first
         self._cached: "collections.OrderedDict[int, None]" = collections.OrderedDict()
         self._indexed: set = set()  # pages whose contents are index-keyed
+        # pages-saved accounting: how many times each indexed page was
+        # re-acquired through a prefix match (each hit is one page of
+        # prefill the warm cache saved).  Eviction uses it as a COST-AWARE
+        # weight on the LRU order: hot chains (system prompts re-matched
+        # every admission) outlive cold ones even when less recent.
+        self._hits: dict = {}
         self.evictions = 0
 
     @property
@@ -253,16 +262,58 @@ class PageAllocator:
         """
         self._cached.clear()
         self._indexed.clear()
+        self._hits.clear()
+
+    def drop_cached(self, pages) -> int:
+        """Explicitly forget specific cached/indexed pages (session close).
+
+        The pages are already on the free list (refcount 0) — they simply
+        stop being matchable and become clean free pages, reusable by the
+        next writer with no eviction work.  Pages still referenced just
+        lose their indexed mark (on release they free plain, not cached).
+        No ``on_evict`` fires — the caller is the index owner and drops
+        its own keys — and no eviction is counted (this is an explicit
+        close, not cache pressure).  Returns how many cached entries died.
+        """
+        n = 0
+        for p in pages:
+            p = int(p)
+            self._indexed.discard(p)
+            self._hits.pop(p, None)
+            if p in self._cached:
+                del self._cached[p]
+                n += 1
+        return n
+
+    def _evict_victim(self) -> int:
+        """Pick + remove the next cached page to evict.
+
+        COST-AWARE LRU: the victim is the cached page with the FEWEST
+        rematch hits (pages historically saved by keeping it), oldest
+        first within a hit count.  With no hits recorded this degrades to
+        exact LRU (insertion order), the PR-7 policy.
+        """
+        victim = None
+        best = None
+        for p in self._cached:  # insertion order == LRU order
+            score = self._hits.get(p, 0)
+            if score == 0:
+                victim = p  # oldest never-rematched page: cannot do better
+                break
+            if best is None or score < best:
+                victim, best = p, score
+        del self._cached[victim]
+        self._indexed.discard(victim)
+        self._hits.pop(victim, None)
+        return victim
 
     def _enforce_budget(self) -> None:
-        """Evict LRU cached entries beyond ``cache_budget`` (stay on free list)."""
+        """Evict cached entries beyond ``cache_budget`` (stay on free list)."""
         if self.cache_budget is None:
             return
         evicted = []
         while len(self._cached) > self.cache_budget:
-            page, _ = self._cached.popitem(last=False)  # LRU first
-            self._indexed.discard(page)
-            evicted.append(page)
+            evicted.append(self._evict_victim())
         if evicted:
             self.evictions += len(evicted)
             if self.on_evict is not None:
@@ -282,8 +333,7 @@ class PageAllocator:
             pages = clean[:n]
             evicted = []
             while len(pages) < n:
-                page, _ = self._cached.popitem(last=False)  # LRU first
-                self._indexed.discard(page)
+                page = self._evict_victim()  # cost-aware LRU
                 evicted.append(page)
                 pages.append(page)
             if evicted:
@@ -314,6 +364,18 @@ class PageAllocator:
         else:
             self._ref[page] += 1
         return True
+
+    def record_saved(self, pages) -> None:
+        """Credit one rematch hit per page: each was mapped instead of
+        re-prefilled by an ADMITTED reservation (callers must not credit
+        rolled-back transactions — a starved head-of-queue retry re-acquires
+        its matches every step and would pump the weights for free).  The
+        hit count is the cost-aware weight ``_evict_victim`` keeps hot
+        chains resident by."""
+        for p in pages:
+            p = int(p)
+            if p in self._indexed:
+                self._hits[p] = self._hits.get(p, 0) + 1
 
     def extend(self, pages: List[int], n: int) -> Optional[List[int]]:
         """Grow an allocation in place by ``n`` pages (all-or-nothing).
@@ -437,6 +499,9 @@ class PrefixIndex:
         self.page_size = page_size
         self._by_key: dict = {}
         self._by_page: dict = {}
+        # chain linkage (parent key -> child keys) for subtree drops:
+        # sessions extend a prefix, so closing one is a branch delete
+        self._children: dict = {}
 
     def __len__(self) -> int:
         return len(self._by_key)
@@ -465,7 +530,12 @@ class PrefixIndex:
         exactly those to ``PageAllocator.mark_indexed``.
         """
         backing: List[int] = []
+        prev = b""
         for i, key in enumerate(self._page_keys(prompt)):
+            # linkage is key-derived (prev + tokens), so recording it even
+            # for kept entries is idempotent and keeps branches walkable
+            self._children.setdefault(prev, set()).add(key)
+            prev = key
             page = self._by_key.get(key)
             if page is not None:  # first registration won; same content
                 backing.append(page)
@@ -495,10 +565,115 @@ class PrefixIndex:
             key = self._by_page.pop(int(p), None)
             if key is not None:
                 del self._by_key[key]
+                self._children.pop(key, None)
+
+    def drop_branch(self, prompt: np.ndarray) -> List[int]:
+        """Forget the prompt's full-page chain AND every registered
+        extension of it (session close: the conversation's own pages plus
+        all replies/turns built on top).  Returns the physical pages whose
+        entries died, so the owner can release them from the allocator's
+        warm cache in the same operation.
+
+        Callers pass the SESSION's prompt, not a shared system prefix —
+        pages keyed at or below the given prefix die for every session
+        that shared them (correctness is unaffected: they re-prefill on
+        next use).  If an interior page was already evicted, the chain
+        walk stops there; the now-unreachable deeper entries decay through
+        the allocator's LRU instead.
+        """
+        chain: List[bytes] = []
+        for key in self._page_keys(prompt):
+            if key not in self._by_key:
+                break
+            chain.append(key)
+        if not chain:
+            return []
+        kill = list(chain)
+        stack = [chain[-1]]
+        while stack:
+            for child in self._children.get(stack.pop(), ()):
+                if child in self._by_key:  # linkage may outlive evictions
+                    kill.append(child)
+                    stack.append(child)
+        dropped: List[int] = []
+        for key in kill:
+            page = self._by_key.pop(key, None)
+            if page is not None:
+                del self._by_page[page]
+                dropped.append(page)
+            self._children.pop(key, None)
+        return dropped
 
     def clear(self) -> None:
         self._by_key.clear()
         self._by_page.clear()
+        self._children.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectedOverload:
+    """Structured shed record attached to a request the admission policy
+    dropped instead of admitting — the overload contract is an explicit
+    rejection the client can retry against, never silent starvation.
+
+    ``reason`` — why it was shed (``"deadline-expired"``, ``"shutdown"``).
+    ``waited_ms`` — how long the request sat in the queue before shedding.
+    ``queue_depth`` — waiters (including this one) at the shed decision.
+    ``deadline_ms`` — the request's own admission deadline, if it had one.
+    """
+
+    uid: int
+    reason: str
+    waited_ms: float
+    queue_depth: int
+    deadline_ms: Optional[float] = None
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Overload-aware admission: degrade rank tier under pressure, shed
+    deadline-expired waiters.
+
+    Tier semantics: tier 0 is the full serving rank; higher indices are
+    NESTED cheaper ranks (prefix slices of the same factors — see
+    ``core.lowrank.slice_rank``).  Under pressure a new admission is
+    degraded to the deepest tier its ``min_tier`` allows instead of
+    queueing behind work the pool cannot hold — quality sheds before
+    latency does, and every degraded response carries the tier's
+    spectral-bound certificate so the delta is reported, not silent.
+
+    Pressure is EITHER signal: queue depth at/above
+    ``degrade_queue_depth`` waiters, or the free-page fraction below
+    ``degrade_free_frac``.  ``None`` disables a signal; with both None
+    (the default) tiers are only ever what the request pinned itself.
+    ``shed_deadlines`` — drop waiters whose ``deadline_ms`` expired
+    before admission, with a :class:`RejectedOverload` attached.
+    """
+
+    n_tiers: int = 1
+    degrade_queue_depth: Optional[int] = None
+    degrade_free_frac: Optional[float] = None
+    shed_deadlines: bool = True
+
+    def choose_tier(self, request, queue_depth: int, free_frac: float) -> int:
+        base = int(getattr(request, "tier", 0))
+        if self.n_tiers <= 1:
+            return base
+        if getattr(request, "_parent", None) is not None:
+            # a preempted request resumes at the tier it started on — its
+            # registered K/V bytes and its emitted tokens are tier-specific,
+            # and mid-request degradation would break bit-exact resume
+            return base
+        pressured = (
+            self.degrade_queue_depth is not None
+            and queue_depth >= self.degrade_queue_depth
+        ) or (
+            self.degrade_free_frac is not None and free_frac < self.degrade_free_frac
+        )
+        if not pressured:
+            return base
+        cap = min(int(getattr(request, "min_tier", 0)), self.n_tiers - 1)
+        return max(base, cap)
 
 
 class Scheduler:
@@ -517,6 +692,16 @@ class Scheduler:
 
     Exhaustion is detected with ``is None`` EXCLUSIVELY — an empty grant
     (``[]`` / ``PageGrant(pages=[])``) admits normally (zero-page archs).
+
+    An optional :class:`AdmissionPolicy` adds the overload layer on top
+    of plain FIFO: before each admission round, deadline-expired waiters
+    are SHED (popped with a :class:`RejectedOverload` attached, collected
+    via :meth:`drain_shed`), and each head-of-queue request is assigned
+    its serving TIER from the policy's pressure signals before ``reserve``
+    sees it.  ``pressure`` is a callable returning the free-resource
+    fraction in [0, 1] (the engine passes its page-pool headroom); with no
+    policy the scheduler behaves exactly as before — queue forever, tier
+    untouched.
     """
 
     def __init__(
@@ -525,14 +710,20 @@ class Scheduler:
         *,
         reserve: Optional[Callable[[object], Optional[object]]] = None,
         release_grant: Optional[Callable[[object], None]] = None,
+        policy: Optional[AdmissionPolicy] = None,
+        pressure: Optional[Callable[[], float]] = None,
     ):
         if (reserve is None) != (release_grant is None):
             raise ValueError("reserve and release_grant come together")
         self.allocator = allocator
         self.reserve = reserve
         self.release_grant = release_grant
+        self.policy = policy
+        self.pressure = pressure
         self.slot_pages: dict = {}
         self.queue: Deque = collections.deque()
+        self.shed: List = []
+        self.degraded = 0  # admissions the policy moved to a cheaper tier
 
     @property
     def n_waiting(self) -> int:
@@ -541,11 +732,57 @@ class Scheduler:
     def enqueue(self, request) -> None:
         self.queue.append(request)
 
+    def drain_shed(self) -> List:
+        """Hand back (and clear) the requests shed since the last drain."""
+        out, self.shed = self.shed, []
+        return out
+
+    def shed_request(self, request, reason: str) -> None:
+        """Mark one waiter shed with a structured rejection (already popped)."""
+        now = time.perf_counter()
+        request.status = "shed"
+        request.t_done = now
+        request.rejected = RejectedOverload(
+            uid=request.uid,
+            reason=reason,
+            waited_ms=(now - request.t_submit) * 1e3,
+            queue_depth=len(self.queue) + 1,
+            deadline_ms=getattr(request, "deadline_ms", None),
+        )
+        self.shed.append(request)
+
+    def _shed_expired(self) -> None:
+        now = time.perf_counter()
+        kept: Deque = collections.deque()
+        while self.queue:
+            req = self.queue.popleft()
+            dl = getattr(req, "deadline_ms", None)
+            if getattr(req, "_parent", None) is not None:
+                # preempted continuations are exempt: the deadline governs
+                # ADMISSION latency, and this request already emitted its
+                # first token before being preempted — shedding it now
+                # would silently discard delivered work
+                dl = None
+            if dl is not None and (now - req.t_submit) * 1e3 > dl:
+                self.shed_request(req, "deadline-expired")
+            else:
+                kept.append(req)
+        self.queue = kept
+
     def admit(self) -> List[Tuple[int, object]]:
+        if self.policy is not None and self.policy.shed_deadlines:
+            self._shed_expired()
         placed = []
         while self.queue and self.allocator.n_free:
+            req = self.queue[0]
+            if self.policy is not None:
+                free_frac = self.pressure() if self.pressure is not None else 1.0
+                tier = self.policy.choose_tier(req, len(self.queue), free_frac)
+                if tier > getattr(req, "tier", 0):
+                    self.degraded += 1
+                    req.tier = tier
             if self.reserve is not None:
-                grant = self.reserve(self.queue[0])
+                grant = self.reserve(req)
                 if grant is None:  # page exhaustion queues; strict FIFO
                     break
                 slot = self.allocator.alloc()

@@ -289,3 +289,32 @@ class TestStackedFusedAllclose:
         want = jnp.stack([ref.lowrank_matmul_ref(x[i], A[i], B[i]) for i in range(3)])
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+# fused rank floor: sliced tiers can carry rank-1 factors
+# --------------------------------------------------------------------------- #
+class TestFusedMinRank:
+    def test_rank_below_floor_never_takes_fused_path(self):
+        # a tier sliced to rank 1 (core.lowrank.slice_rank with a tiny
+        # fraction) must fall back: the fused kernel's rank tile would be
+        # ~all padding
+        cfg = DispatchConfig(fused_min_rank=4)
+        below = choose_lowrank_path((64, 96), (96, 2), (2, 40), jnp.float32,
+                                    config=cfg, platform="tpu")
+        assert below == PATH_TWO_GEMM
+        at = choose_lowrank_path((64, 96), (96, 4), (4, 40), jnp.float32,
+                                 config=cfg, platform="tpu")
+        assert at == PATH_FUSED
+        # the floor binds even when Pallas is pinned explicitly
+        pinned = DispatchConfig(backend="pallas", fused_min_rank=4)
+        forced = choose_lowrank_path((64, 96), (96, 2), (2, 40), jnp.float32,
+                                     config=pinned, platform="tpu")
+        assert forced == PATH_TWO_GEMM
+
+    def test_default_floor_only_excludes_degenerate_ranks(self):
+        cfg = DispatchConfig()
+        assert cfg.fused_min_rank == 2
+        got = choose_lowrank_path((64, 96), (96, 1), (1, 40), jnp.float32,
+                                  config=cfg, platform="tpu")
+        assert got == PATH_TWO_GEMM

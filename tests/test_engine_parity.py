@@ -573,3 +573,133 @@ def test_eviction_churn_no_stale_matches():
         ref = cold.run([Request(prompt=f.copy(), max_new_tokens=4)])[0]
         assert r.tokens == ref.tokens, "stale warm-cache match corrupted decode"
     assert warm.pages_in_use == 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_tiered_engine_greedy_self_consistency(arch_id):
+    """Elastic-rank tiers: a request served at tier f must emit tokens
+    bit-identical to ``greedy_generate`` on a model STATICALLY compressed
+    with ``slice_rank(params, f)`` — the tier is a trace-time view of the
+    same factors, never a different model.  Both tiers run CONCURRENTLY on
+    one engine (separate fused passes over one paged pool), and degraded
+    responses carry the tier's certificate."""
+    cfg = get_arch(arch_id, reduced=True)
+    if cfg.family not in ("dense", "moe") or cfg.sliding_window is not None:
+        pytest.skip("tier parity is pinned on the chunk-capable families")
+    from repro.core import CompressionPolicy, compress_tree, spectralize_params
+    from repro.core.lowrank import slice_rank
+
+    model = build_model(cfg)
+    params = spectralize_params(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(9))
+    params, _, rep = compress_tree(
+        params, CompressionPolicy(alpha=0.5, q=2, min_dim=16), jax.random.PRNGKey(1)
+    )
+    assert any(l.compressed for l in rep.layers)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    extras = modality_extras(cfg, rng)
+    tiers = (1.0, 0.5)
+
+    eng = Engine(
+        model, params, n_slots=2, max_len=MAX_LEN, page_size=4,
+        share_prefix=True, tiers=tiers, tier_q=2,
+    )
+    reqs = [
+        eng.submit(
+            Request(prompt=prompt.copy(), max_new_tokens=5, extras=extras, tier=t)
+        )
+        for t in range(len(tiers))
+    ]
+    while eng.has_work:
+        eng.step()
+    for t, req in enumerate(reqs):
+        ref = _reference(model, slice_rank(params, tiers[t]), prompt, extras, 5)
+        assert req.tokens == ref, f"tier {t} diverged for {arch_id}"
+        assert req.certificate is not None
+        assert np.isfinite(req.certificate.prob_deviation_bound)
+    # the degraded tier's certified bound strictly dominates the full tier's
+    assert reqs[1].certificate.prob_deviation_bound >= reqs[0].certificate.prob_deviation_bound
+    assert reqs[0].certificate.prob_deviation_bound == 0.0
+
+
+def test_tiered_engine_rejects_recurrent_families():
+    """Multi-tier decode would corrupt live recurrent state rows (frozen
+    slots' re-feeds integrate into SSM state with the WRONG tier's params
+    and never self-repair), so construction must refuse."""
+    cfg = get_arch("mamba2-130m", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent"):
+        Engine(model, params, n_slots=2, max_len=MAX_LEN, tiers=(1.0, 0.5))
+    # single-tier construction stays allowed
+    Engine(model, params, n_slots=2, max_len=MAX_LEN, tiers=(1.0,))
+
+
+@pytest.mark.parametrize("share", [True, False])
+def test_preempt_resume_greedy_parity(share):
+    """Preemption is invisible in the token stream: a request preempted
+    mid-decode (its pages reclaimed for a higher-priority waiter) resumes
+    via a re-queued continuation and must finish with tokens bit-identical
+    to an uninterrupted run — with prefix sharing (warm-restore of its
+    decode-filled pages) AND without (full re-prefill of the extension)."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(12)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+        rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+    ]
+    steps = [10, 6]
+    refs = [_reference2(model, params, p, s) for p, s in zip(prompts, steps)]
+
+    # pool sized so both requests can never run together: r0 holds all 5
+    # pages, so admitting r1 REQUIRES preempting r0
+    eng = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, kv_pages=5,
+        share_prefix=share, preempt=True, decode_block=2,
+    )
+    r0 = eng.submit(Request(prompt=prompts[0], max_new_tokens=steps[0], priority=0))
+    eng.step()
+    eng.step()  # r0 is mid-decode with several tokens emitted
+    assert 0 < len(r0.tokens) < steps[0]
+    r1 = eng.submit(Request(prompt=prompts[1], max_new_tokens=steps[1], priority=1))
+    while eng.has_work:
+        eng.step()
+    assert eng.preemptions == 1
+    assert r1.tokens == refs[1], "preemptor diverged"
+    assert r0.tokens == refs[0], "preempted request did not resume bit-identically"
+    assert r0.status == "ok" and r0.uid == 0
+    assert eng.pages_in_use == 0
+
+
+def test_preemption_requires_higher_priority():
+    """Equal-priority waiters never preempt: plain FIFO queueing is the
+    default behavior and stays byte-for-byte intact with preempt=True."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+        rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+    ]
+    eng = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, kv_pages=5,
+        preempt=True, decode_block=2,
+    )
+    r0 = eng.submit(Request(prompt=prompts[0], max_new_tokens=10))
+    eng.step()
+    r1 = eng.submit(Request(prompt=prompts[1], max_new_tokens=6))
+    while eng.has_work:
+        eng.step()
+    assert eng.preemptions == 0
+    assert r0.tokens == _reference2(model, params, prompts[0], 10)
+    assert r1.tokens == _reference2(model, params, prompts[1], 6)
+
+
+def _reference2(model, params, prompt, steps):
+    out = greedy_generate(
+        model, params, {"tokens": jnp.asarray(prompt[None])}, steps=steps, max_len=32
+    )
+    return np.asarray(out)[0].tolist()

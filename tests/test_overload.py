@@ -1,0 +1,479 @@
+"""Overload-resilience machinery: nested rank tiers (slice_rank + per-tier
+certificates), admission policy (tier degradation + deadline shedding),
+cost-aware warm-cache eviction, session close (prefix-branch drop), NaN
+quarantine, fault injection, and graceful shutdown."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core.bounds import certify_tier
+from repro.core.lowrank import is_lowrank, min_rank, slice_rank
+from repro.models.model import build_model
+from repro.runtime.fault_tolerance import FaultInjector
+from repro.serving.engine import AdmissionPolicy, Engine, Request
+from repro.serving.scheduler import PageAllocator, PrefixIndex, Scheduler, SlotAllocator
+
+
+# --------------------------------------------------------------------------- #
+# slice_rank: nested tiers are prefix slices
+# --------------------------------------------------------------------------- #
+def _factored(shape_a, shape_b, seed=0):
+    k = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(k)
+    return {
+        "a": jax.random.normal(ka, shape_a, jnp.float32),
+        "b": jax.random.normal(kb, shape_b, jnp.float32),
+    }
+
+
+def test_slice_rank_is_prefix_slice():
+    """Tier factors are EXACT prefix slices of the stored factors — the RSI
+    nesting property (singular directions sorted descending) is what makes
+    one checkpoint serve every tier."""
+    params = {"layer": {"w": _factored((32, 8), (8, 48))}}
+    out = slice_rank(params, 0.5)
+    a, b = params["layer"]["w"]["a"], params["layer"]["w"]["b"]
+    np.testing.assert_array_equal(np.asarray(out["layer"]["w"]["a"]), np.asarray(a[:, :4]))
+    np.testing.assert_array_equal(np.asarray(out["layer"]["w"]["b"]), np.asarray(b[:4, :]))
+
+
+def test_slice_rank_stacked_factors_and_dense_passthrough():
+    """Stacked scan/MoE factors slice on the RANK axis only; dense leaves and
+    non-factored subtrees pass through untouched (same objects — zero copy)."""
+    dense = jnp.ones((16, 16))
+    params = {
+        "stack": {"w": _factored((4, 32, 8), (4, 8, 48))},
+        "moe": {"w": _factored((2, 3, 32, 8), (2, 3, 8, 48))},
+        "dense": dense,
+        "nested": {"leaf": dense},
+    }
+    out = slice_rank(params, 0.25)
+    assert out["stack"]["w"]["a"].shape == (4, 32, 2)
+    assert out["stack"]["w"]["b"].shape == (4, 2, 48)
+    assert out["moe"]["w"]["a"].shape == (2, 3, 32, 2)
+    assert out["moe"]["w"]["b"].shape == (2, 3, 2, 48)
+    assert out["dense"] is dense
+    assert out["nested"]["leaf"] is dense
+
+
+def test_slice_rank_fraction_validation_and_identity():
+    params = {"w": _factored((8, 4), (4, 8))}
+    assert slice_rank(params, 1.0) is params  # identity, not a copy
+    with pytest.raises(ValueError):
+        slice_rank(params, 0.0)
+    with pytest.raises(ValueError):
+        slice_rank(params, 1.5)
+    # a tiny fraction never slices below rank 1
+    out = slice_rank(params, 1e-6)
+    assert out["w"]["a"].shape[-1] == 1
+
+
+def test_min_rank_reports_smallest_factored_rank():
+    params = {
+        "w1": _factored((8, 6), (6, 8)),
+        "w2": _factored((8, 3), (3, 8), seed=1),
+        "dense": jnp.ones((4, 4)),
+    }
+    assert min_rank(params) == 3
+    assert min_rank({"dense": jnp.ones((4, 4))}) == 0
+    assert is_lowrank(params["w1"]) and not is_lowrank(params)
+
+
+# --------------------------------------------------------------------------- #
+# certify_tier: Thm 3.2 on the sliced-off tail
+# --------------------------------------------------------------------------- #
+def test_certify_tier_bound_matches_dropped_tail():
+    """The tier's extra deviation over the stored rank is the spectral norm
+    of the dropped factor tail; full rank certifies EXACTLY zero, and deeper
+    slices certify monotonically larger bounds."""
+    a, b = _factored((32, 8), (8, 48))["a"], _factored((32, 8), (8, 48))["b"]
+    key = jax.random.PRNGKey(0)
+    full = certify_tier(a, b, 8, key, q=2)
+    assert full.spectral_error == 0.0 and full.prob_deviation_bound == 0.0
+    c4 = certify_tier(a, b, 4, key, q=2)
+    c2 = certify_tier(a, b, 2, key, q=2)
+    tail4 = np.asarray(a[:, 4:] @ b[4:, :])
+    ref4 = np.linalg.svd(tail4, compute_uv=False)[0]
+    assert c4.spectral_error == pytest.approx(ref4, rel=1e-3)
+    assert 0.0 < c4.prob_deviation_bound <= c2.prob_deviation_bound
+    assert c4.rank == 4 and c4.q == 2
+
+
+def test_certify_tier_stacked_takes_worst_slice():
+    p = _factored((3, 16, 6), (3, 6, 20))
+    key = jax.random.PRNGKey(1)
+    cert = certify_tier(p["a"], p["b"], 3, key, q=1)
+    worst = max(
+        np.linalg.svd(np.asarray(p["a"][i, :, 3:] @ p["b"][i, 3:, :]),
+                      compute_uv=False)[0]
+        for i in range(3)
+    )
+    assert cert.spectral_error == pytest.approx(worst, rel=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# AdmissionPolicy + deadline shedding (pure scheduler level)
+# --------------------------------------------------------------------------- #
+def _req(prompt_len=4, max_new=4, **kw):
+    return Request(
+        prompt=np.arange(prompt_len, dtype=np.int32), max_new_tokens=max_new, **kw
+    )
+
+
+def test_policy_degrades_only_under_pressure():
+    pol = AdmissionPolicy(n_tiers=3, degrade_queue_depth=4, degrade_free_frac=0.25)
+    r = _req(min_tier=2)
+    assert pol.choose_tier(r, queue_depth=1, free_frac=1.0) == 0  # no pressure
+    assert pol.choose_tier(r, queue_depth=4, free_frac=1.0) == 2  # queue depth
+    assert pol.choose_tier(r, queue_depth=0, free_frac=0.1) == 2  # page pressure
+    # a request that pins min_tier=0 is NEVER degraded
+    assert pol.choose_tier(_req(min_tier=0), 9, 0.0) == 0
+    # min_tier beyond the engine's tiers clamps to the deepest real tier
+    assert pol.choose_tier(_req(min_tier=7), 9, 0.0) == 2
+
+
+def test_policy_never_degrades_resumed_continuations():
+    pol = AdmissionPolicy(n_tiers=2, degrade_queue_depth=1)
+    cont = _req(min_tier=1)
+    cont._parent = _req()
+    assert pol.choose_tier(cont, queue_depth=9, free_frac=0.0) == 0
+
+
+def test_scheduler_sheds_expired_waiters_with_structured_rejection():
+    sched = Scheduler(
+        SlotAllocator(1), policy=AdmissionPolicy(n_tiers=1, shed_deadlines=True)
+    )
+    live = _req()
+    live.t_submit = time.perf_counter()
+    stale = _req(deadline_ms=5.0)
+    stale.t_submit = time.perf_counter() - 1.0  # expired 995 ms ago
+    stale.uid = 7
+    sched.enqueue(stale)
+    sched.enqueue(live)
+    placed = sched.admit()
+    assert [r.uid for _, r in placed] == [live.uid]
+    shed = sched.drain_shed()
+    assert len(shed) == 1 and shed[0] is stale
+    assert stale.status == "shed" and stale.t_done > 0
+    rej = stale.rejected
+    assert rej.uid == 7 and rej.reason == "deadline-expired"
+    assert rej.waited_ms > 900 and rej.deadline_ms == 5.0 and rej.queue_depth >= 1
+    assert sched.drain_shed() == []  # drained exactly once
+
+
+def test_scheduler_without_policy_ignores_deadlines():
+    """Plain FIFO engines (the benchmark baseline) must not shed: deadlines
+    are policy semantics, not request semantics."""
+    sched = Scheduler(SlotAllocator(1))
+    stale = _req(deadline_ms=1.0)
+    stale.t_submit = time.perf_counter() - 1.0
+    sched.enqueue(stale)
+    placed = sched.admit()
+    assert len(placed) == 1 and placed[0][1] is stale
+    assert stale.status == "ok" and sched.drain_shed() == []
+
+
+def test_scheduler_degrades_tier_at_admission():
+    sched = Scheduler(
+        SlotAllocator(2),
+        policy=AdmissionPolicy(n_tiers=2, degrade_free_frac=0.5),
+        pressure=lambda: 0.1,
+    )
+    a, b = _req(min_tier=1), _req(min_tier=0)
+    sched.enqueue(a)
+    sched.enqueue(b)
+    sched.admit()
+    assert a.tier == 1 and b.tier == 0
+    assert sched.degraded == 1
+
+
+# --------------------------------------------------------------------------- #
+# cost-aware warm-cache eviction
+# --------------------------------------------------------------------------- #
+def test_eviction_prefers_never_rematched_pages():
+    """A colder-but-newer page dies before a hot chain: eviction weight is
+    pages-saved-on-rematch, LRU only breaks ties."""
+    pool = PageAllocator(4)
+    pages = pool.alloc(4)
+    pool.mark_indexed(pages)
+    pool.free(pages)  # all 4 cached; LRU order after reversed re-cache: 3,2,1,0
+    pool.record_saved([0, 1])  # pages 0 and 1 are a hot chain
+    pool.record_saved([0, 1])
+    got = pool.alloc(3)  # no clean pages left: must evict 3 of 4
+    # the two never-rematched pages (3, 2) die first, then the colder end
+    # of the hot chain — page 0/1 with 2 hits each falls back to LRU
+    assert set(got) == {3, 2, 1} or set(got) == {3, 2, 0}
+    assert pool.n_cached == 1
+
+
+def test_eviction_without_hits_degrades_to_exact_lru():
+    pool = PageAllocator(3)
+    pages = pool.alloc(3)
+    pool.mark_indexed(pages)
+    pool.free(pages)  # cached recency (old->new): 2, 1, 0
+    assert pool.alloc(1) == [2]
+    assert pool.alloc(1) == [1]
+
+
+def test_record_saved_ignores_unindexed_pages():
+    pool = PageAllocator(2)
+    pool.record_saved([0, 1])  # never indexed: no weights accrue
+    assert pool._hits == {}
+
+
+def test_drop_cached_releases_without_eviction_accounting():
+    pool = PageAllocator(3)
+    pages = pool.alloc(3)
+    pool.mark_indexed(pages)
+    pool.free(pages)
+    assert pool.n_cached == 3
+    n = pool.drop_cached([0, 1, 99 % 3])  # page 0, 1, 0 -> 2 distinct entries
+    assert n >= 2 and pool.evictions == 0
+    assert pool.n_cached <= 1
+
+
+# --------------------------------------------------------------------------- #
+# PrefixIndex.drop_branch: session close
+# --------------------------------------------------------------------------- #
+def test_drop_branch_kills_chain_and_extensions():
+    idx = PrefixIndex(4)
+    base = np.arange(8, dtype=np.int32)  # 2 full pages
+    turn2 = np.concatenate([base, np.arange(100, 108, dtype=np.int32)])  # 4 pages
+    other = np.arange(200, 208, dtype=np.int32)  # unrelated session
+    idx.register(base, [0, 1])
+    idx.register(turn2, [0, 1, 2, 3])
+    idx.register(other, [4, 5])
+    dropped = idx.drop_branch(base)
+    assert sorted(dropped) == [0, 1, 2, 3]
+    assert idx.match(turn2) == [] and idx.match(base) == []
+    assert idx.match(other) == [4, 5]  # the unrelated session survives
+    assert idx.drop_branch(base) == []  # idempotent
+
+
+def test_drop_branch_unknown_prefix_is_noop():
+    idx = PrefixIndex(4)
+    idx.register(np.arange(8, dtype=np.int32), [0, 1])
+    assert idx.drop_branch(np.arange(50, 58, dtype=np.int32)) == []
+    assert len(idx) == 2
+
+
+def test_engine_drop_session_frees_cached_pages():
+    """Closing a session drops its branch from every tier index AND releases
+    the warm-cache pages immediately — a follow-up on the dropped session
+    re-prefills cold while other sessions keep matching."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(21)
+    p_a = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    p_b = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    eng = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, share_prefix=True
+    )
+    ra = eng.run([Request(prompt=p_a, max_new_tokens=5)])[0]
+    rb = eng.run([Request(prompt=p_b, max_new_tokens=5)])[0]
+    cached_before = eng.prefix_cached_pages
+    assert cached_before > 0
+    freed = eng.drop_session(p_a)
+    assert freed > 0 and eng.prefix_cached_pages == cached_before - freed
+    assert eng.drop_session(p_a) == 0  # idempotent until the session returns
+    # session A re-prefills cold; session B still matches warm pages
+    fa = np.concatenate([p_a, np.asarray(ra.tokens, np.int32)])
+    fb = np.concatenate([p_b, np.asarray(rb.tokens, np.int32)])
+    r2a = eng.run([Request(prompt=fa, max_new_tokens=3)])[0]
+    r2b = eng.run([Request(prompt=fb, max_new_tokens=3)])[0]
+    assert r2a.prefill_skipped == 0
+    assert r2b.prefill_skipped > 0
+    # flat engines: structurally a no-op
+    flat = Engine(model, params, n_slots=1, max_len=32)
+    assert flat.drop_session(p_a) == 0
+
+
+# --------------------------------------------------------------------------- #
+# engine-level overload behavior
+# --------------------------------------------------------------------------- #
+def test_engine_degrades_admission_under_page_pressure():
+    """With the pool nearly full, a min_tier=1 request admits DEGRADED
+    instead of queueing at full rank, and carries the tier certificate."""
+    from repro.core import CompressionPolicy, compress_tree, spectralize_params
+
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = spectralize_params(model.init(jax.random.PRNGKey(0)), jax.random.PRNGKey(9))
+    params, _, _ = compress_tree(
+        params, CompressionPolicy(alpha=0.5, q=2, min_dim=16), jax.random.PRNGKey(1)
+    )
+    rng = np.random.default_rng(30)
+    eng = Engine(
+        model, params, n_slots=2, max_len=32, page_size=4, kv_pages=10,
+        decode_block=2, tiers=(1.0, 0.5), tier_q=2,
+        admission=AdmissionPolicy(n_tiers=2, degrade_free_frac=0.9),
+    )
+    r0 = eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+        max_new_tokens=16, min_tier=0,
+    ))
+    eng.step()  # r0 stays resident holding 6/10 pages: pressure is on
+    assert eng.n_active == 1 and eng._free_page_frac() < 0.9
+    r1 = eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32),
+        max_new_tokens=4, min_tier=1,
+    ))
+    while eng.has_work:
+        eng.step()
+    assert r0.tier == 0  # min_tier=0 pins full rank even under pressure
+    assert r1.tier == 1
+    assert eng.degraded_admissions == 1
+    assert r1.certificate is not None
+    assert r1.certificate.prob_deviation_bound > 0.0
+    assert r1.status == "ok" and len(r1.tokens) == 4
+    assert r0.status == "ok" and len(r0.tokens) == 16
+
+
+def test_engine_sheds_expired_waiters_in_step():
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(31)
+    eng = Engine(
+        model, params, n_slots=1, max_len=32, page_size=4, kv_pages=4,
+        admission=AdmissionPolicy(n_tiers=1),
+    )
+    r0 = eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+        max_new_tokens=8,
+    ))
+    waiter = eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32),
+        max_new_tokens=4, deadline_ms=1.0,
+    ))
+    eng.step()  # r0 admitted (whole pool); waiter queues with a 1 ms deadline
+    time.sleep(0.01)
+    finished = []
+    while eng.has_work:
+        finished.extend(eng.step())
+    assert waiter in finished
+    assert waiter.status == "shed"
+    assert waiter.rejected is not None
+    assert waiter.rejected.reason == "deadline-expired"
+    assert r0.status == "ok" and len(r0.tokens) == 8
+
+
+def test_engine_graceful_drain_on_stop():
+    """run(stop=...): queued work sheds with a "shutdown" rejection, active
+    slots decode to completion — never killed mid-stream."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(32)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32),
+                max_new_tokens=6)
+        for _ in range(3)
+    ]
+    eng = Engine(model, params, n_slots=1, max_len=32, page_size=4, kv_pages=4)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 2  # let the first request admit, then drain
+
+    finished = eng.run(reqs, stop=stop)
+    assert not eng.has_work
+    done = [r for r in finished if r.status == "ok"]
+    shed = [r for r in finished if r.status == "shed"]
+    assert len(done) >= 1 and len(shed) >= 1 and len(done) + len(shed) <= 3
+    for r in done:
+        assert len(r.tokens) == 6  # in-flight work finished, not truncated
+    for r in shed:
+        assert r.rejected.reason == "shutdown"
+
+
+# --------------------------------------------------------------------------- #
+# fault injection + quarantine
+# --------------------------------------------------------------------------- #
+def test_injector_deny_pages_window_and_slow_steps():
+    inj = FaultInjector(deny_pages=(2, 4), slow_steps=(1, 2), slow_ms=1.0)
+    assert not inj.deny_reserve(1)
+    assert inj.deny_reserve(2) and inj.deny_reserve(3)
+    assert not inj.deny_reserve(4)
+    t0 = time.perf_counter()
+    inj.on_step(1)
+    assert time.perf_counter() - t0 >= 1e-3
+    inj.on_step(5)  # outside the window: no sleep
+    assert inj.fired == {"deny_pages": 2, "slow_step": 1}
+
+
+def test_injector_poison_resolves_to_slot_and_block_step():
+    inj = FaultInjector(nan_logits=(7, 10))
+    uid_of = lambda s: {0: 3, 1: 7}.get(s)
+    assert inj.poison_for(uid_of, 2, 0, 8) == (-1, -1)  # step 10 not in [0, 8)
+    assert inj.poison_for(uid_of, 2, 8, 8) == (1, 2)  # 10 - 8 = 2, slot 1
+    assert inj.fired.get("nan_logits") == 1
+    assert FaultInjector().poison_for(uid_of, 2, 0, 8) == (-1, -1)
+
+
+def test_engine_quarantines_poisoned_request_others_unaffected():
+    """The acceptance contract: the poisoned request errors out with a
+    structured status, every OTHER request's tokens are bit-identical to an
+    uninjected run, and the engine keeps serving afterwards."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(33)
+    prompts = [rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32) for _ in range(3)]
+    steps = [8, 8, 8]
+
+    clean = Engine(model, params, n_slots=3, max_len=32, decode_block=4)
+    refs = clean.run(
+        [Request(prompt=p.copy(), max_new_tokens=s) for p, s in zip(prompts, steps)]
+    )
+    refs = {r.uid: r.tokens for r in refs}
+
+    inj = FaultInjector(nan_logits=(1, 5))  # uid 1, global decode step 5
+    eng = Engine(model, params, n_slots=3, max_len=32, decode_block=4, injector=inj)
+    reqs = [
+        Request(prompt=p.copy(), max_new_tokens=s) for p, s in zip(prompts, steps)
+    ]
+    out = eng.run(reqs)
+    assert inj.fired.get("nan_logits") == 1
+    assert eng.quarantined == 1
+    by_uid = {r.uid: r for r in out}
+    bad = by_uid[1]
+    assert bad.status == "error" and "non-finite" in bad.error
+    assert 0 < len(bad.tokens) < 8  # froze mid-stream, kept pre-fault tokens
+    assert bad.tokens == refs[1][: len(bad.tokens)]  # nothing corrupt emitted
+    for uid in (0, 2):
+        assert by_uid[uid].status == "ok"
+        assert by_uid[uid].tokens == refs[uid], "quarantine leaked into the batch"
+    # the engine keeps serving after a quarantine
+    again = eng.run([Request(prompt=prompts[0].copy(), max_new_tokens=4)])[0]
+    assert again.status == "ok" and len(again.tokens) == 4
+
+
+def test_injector_deny_pages_starves_admission_then_recovers():
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(34)
+    inj = FaultInjector(deny_pages=(1, 3))
+    eng = Engine(
+        model, params, n_slots=1, max_len=32, page_size=4, kv_pages=8,
+        injector=inj,
+    )
+    r = eng.submit(Request(
+        prompt=rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32),
+        max_new_tokens=4,
+    ))
+    eng.step()  # step 1: reservation denied
+    assert eng.n_waiting == 1 and inj.fired.get("deny_pages", 0) >= 1
+    eng.step()  # step 2: still denied
+    assert eng.n_waiting == 1
+    while eng.has_work:
+        eng.step()  # step 3+: window closed, admission recovers
+    assert r.status == "ok" and len(r.tokens) == 4
