@@ -1031,6 +1031,381 @@ def check_overload_rows(rows) -> int:
     return failures
 
 
+def run_failover_trace(
+    archs=("llama3.2-1b",),
+    *,
+    rate: float = 200.0,
+    n_requests: int = 12,
+    n_slots: int = 2,
+    n_replicas: int = 2,
+    prompt_range=(3, 7),
+    gen_range=(12, 16),
+    sys_prompt_len: int = 8,
+    page_size: int = 4,
+    decode_block: int = 4,
+    heartbeat_ms: float = 150.0,
+    max_failovers: int = 3,
+    kill_step: int = 6,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    warmup: bool = True,
+    inject: str = "",
+):
+    """Replay one system-prompt burst three ways — a single engine (the
+    bit-exactness reference), a healthy N-replica cluster, and (with
+    ``inject="kill_replica"``) the same cluster with replica 0 killed
+    mid-burst — and gate the failover contract in the same run
+    (:func:`check_failover_rows`).
+
+    The trace is SYSTEM-PROMPT traffic on a sharing engine:
+    ``sys_prompt_len`` spans ≥ 2 full pages, so by kill time every
+    replica's prefix index holds the shared prefix — a failover
+    continuation re-routed to the survivor matches those pages read-only
+    (``prefill_skipped > 0``) and the trace demonstrably exercises the
+    PREFIX-MATCH resume path, not just cold re-prefill.
+
+    Greedy determinism is gated per COMPUTE PATH.  Requests that never
+    failed over must be bit-identical to the single-engine replay (same
+    path, no excuse).  A failed-over request's credited prefix must be
+    bit-identical up to the kill point, and its resumed tail is verified
+    by REPLAYING the exact continuation on the reference engine in the
+    same run — the resume must reproduce, bit for bit, what any healthy
+    engine emits for that continuation.  (Prefill-written and
+    decode-written KV differ in low-order bits — a property the engine's
+    merged preemption path shares — so the resumed tail may legitimately
+    diverge from the UNINTERRUPTED replay at an argmax near-tie; the
+    replay check is the strongest bit-exactness the engine actually
+    guarantees, and it is checked, not assumed.)
+
+    All gates are same-run relative (two cluster rows share this
+    machine's load); the only wall-clock allowance is the detection
+    window — a killed replica's waiters cannot get their first token
+    before the heartbeat deadline expires, so the kill row's p95 TTFT
+    gate adds a ``heartbeat_ms``-proportional term.  Replica threads
+    contend for the same CPU, so the cluster rows raise the straggler
+    kill floor (``straggler_min_s=2.0``) — slow-device detection has its
+    own unit tests; this trace must not false-kill under CI load.
+    """
+    from repro.data.synthetic import modality_extras
+    from repro.runtime.fault_tolerance import FaultInjector
+    from repro.serving import Cluster, Engine, Request, SamplingParams
+    from repro.serving.engine import percentile
+    from repro.serving.scheduler import FailoverBudget
+
+    assert sys_prompt_len >= 2 * page_size, (
+        "sys prompt must span >= 2 full pages so survivors prefix-match"
+    )
+    rows = []
+    for arch in archs:
+        cfg = get_arch(arch, reduced=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        rng = np.random.default_rng(seed)
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests)).tolist()
+        max_len = sys_prompt_len + prompt_range[1] + gen_range[1]
+        sys_prompt = rng.integers(0, cfg.vocab, size=(sys_prompt_len,)).astype(
+            np.int32
+        )
+        trace = []
+        for i in range(n_requests):
+            user = rng.integers(
+                0, cfg.vocab, size=(int(rng.integers(*prompt_range)),)
+            ).astype(np.int32)
+            trace.append(dict(
+                prompt=np.concatenate([sys_prompt, user]),
+                max_new=int(rng.integers(*gen_range)),
+            ))
+
+        def build_reqs():
+            return [
+                Request(
+                    prompt=t["prompt"].copy(),
+                    max_new_tokens=t["max_new"],
+                    sampling=SamplingParams(
+                        temperature=temperature, top_k=top_k, seed=seed + i
+                    ),
+                    extras=modality_extras(cfg, np.random.default_rng(seed + i)),
+                )
+                for i, t in enumerate(trace)
+            ]
+
+        def make_engine(_rid=0):
+            # chunk == page: every prompt exceeds it, so ALL prefill rides
+            # the one compiled (1, C) chunk program — failover resumes
+            # (arbitrary prompt+emitted lengths) never hit a cold bucket
+            return Engine(
+                model, params, n_slots=n_slots, max_len=max_len,
+                decode_block=decode_block, page_size=page_size,
+                prefill_chunk=page_size, share_prefix=True,
+            )
+
+        def warm(eng):
+            wrng = np.random.default_rng(seed + 1)
+            wsp = SamplingParams(temperature=temperature, top_k=top_k, seed=seed)
+            for g in (1, n_slots):
+                eng.run([
+                    Request(
+                        prompt=wrng.integers(
+                            0, cfg.vocab, size=(sys_prompt_len + prompt_range[1],)
+                        ),
+                        max_new_tokens=2, sampling=wsp,
+                        extras=modality_extras(cfg, wrng),
+                    )
+                    for _ in range(g)
+                ])
+            eng.reset_prefix_cache()
+            eng.reset_counters()
+
+        def summarize(label, done, reqs, engines, dt, clu=None, fired=0):
+            assert len(done) == n_requests, (label, len(done), n_requests)
+            ok = [r for r in done if r.status == "ok"]
+            shed = [r for r in done if r.status == "shed"]
+            errored = [r for r in done if r.status == "error"]
+            ttfts = sorted(r.ttft for r in ok if r.ttft is not None)
+            lats = sorted(r.latency for r in ok if r.latency is not None)
+            n_tok = sum(len(r.tokens) for r in done)
+            syncs = sum(e.host_syncs for e in engines)
+            row = dict(
+                name=f"failover={arch}+{label}",
+                arch=f"{arch}+{label}",
+                seconds=dt,
+                tok_s=n_tok / dt,
+                p50_ms=percentile(lats, 0.5) * 1e3 if lats else 0.0,
+                p95_ms=percentile(lats, 0.95) * 1e3 if lats else 0.0,
+                ttft_ms=float(np.mean(ttfts)) * 1e3 if ttfts else 0.0,
+                p95_ttft_ms=percentile(ttfts, 0.95) * 1e3 if ttfts else 0.0,
+                completed=len(ok),
+                shed=len(shed),
+                errored=len(errored),
+                n_requests=n_requests,
+                decode_steps=sum(e.steps for e in engines),
+                host_syncs=syncs,
+                tok_per_sync=(
+                    sum(e.decoded_tokens for e in engines) / max(syncs, 1)
+                ),
+                util=float(np.mean([e.batch_utilization for e in engines])),
+                peak_active=max(e.peak_active for e in engines),
+                kv_bytes_cap=sum(e.kv_bytes_capacity for e in engines),
+                kv_bytes_peak=sum(e.kv_bytes_peak for e in engines),
+                pages_peak=max(e.peak_pages_in_use for e in engines),
+                prefill_chunks=sum(e.prefill_chunks for e in engines),
+                shared_hits=sum(e.shared_page_hits for e in engines),
+                cow_forks=sum(e.cow_forks for e in engines),
+                replicas=len(engines),
+                heartbeat_ms=heartbeat_ms,
+                failovers=clu.failovers if clu else 0,
+                failovers_prefix_match=clu.failovers_prefix_match if clu else 0,
+                replica_lost=clu.replica_deaths if clu else 0,
+                heartbeat_misses=clu.heartbeat_misses if clu else 0,
+                # same-run gate currency (underscore keys never reach
+                # CSV/JSON)
+                _status=[r.status for r in done],
+                _tokens=(
+                    [list(r.tokens) for r in reqs]
+                    if temperature == 0.0 else None
+                ),
+                _rejects_structured=all(
+                    r.rejected is not None and r.rejected.uid == r.uid
+                    for r in shed
+                ),
+                _fired=fired,
+                _failed_over=(
+                    [r.uid in clu.resume_points for r in reqs]
+                    if clu else [False] * len(reqs)
+                ),
+                _splits=(
+                    {i: list(clu.resume_points[r.uid])
+                     for i, r in enumerate(reqs) if r.uid in clu.resume_points}
+                    if clu else {}
+                ),
+                _resume_bad=0,
+            )
+            return row
+
+        # --- reference: one engine, no cluster, same trace -------------
+        eng = make_engine()
+        if warmup:
+            warm(eng)
+        reqs_single = build_reqs()
+        t0 = time.perf_counter()
+        done = eng.run(reqs_single, arrivals=arrivals)
+        dt = time.perf_counter() - t0
+        single_tokens = [list(r.tokens) for r in reqs_single]
+        rows.append(summarize("single", done, reqs_single, [eng], dt))
+
+        # --- the cluster rows: healthy, then with a replica killed -----
+        def cluster_row(label, injector=None):
+            clu = Cluster(
+                make_engine, n_replicas,
+                heartbeat_ms=heartbeat_ms,
+                budget=FailoverBudget(max_failovers=max_failovers,
+                                      base_ms=10.0),
+                injector=injector,
+                straggler_min_s=2.0,
+            )
+            if warmup:
+                for rep in clu.replicas:
+                    warm(rep.eng)
+            reqs = build_reqs()
+            t0 = time.perf_counter()
+            done = clu.run(reqs, arrivals=arrivals, timeout_s=120.0)
+            dt = time.perf_counter() - t0
+            clu.close()
+            fired = injector.fired.get("kill_replica", 0) if injector else 0
+            row = summarize(
+                label, done, reqs, [r.eng for r in clu.replicas], dt,
+                clu=clu, fired=fired,
+            )
+            return row, reqs
+
+        def verify_resumes(row, kreqs):
+            """Replay each failed-over request's continuation(s) on the
+            reference engine: the credited prefix must match the single
+            replay bit-for-bit up to the first split, and every resumed
+            tail must be exactly what the healthy engine emits for that
+            continuation.  Returns the number of corrupt streams."""
+            bad = 0
+            eng.reset_prefix_cache()
+            eng.reset_counters()
+            for i, req in enumerate(kreqs):
+                splits = row["_splits"].get(i)
+                if not splits or req.status != "ok":
+                    continue
+                chain = list(req.tokens)
+                if chain[: splits[0]] != single_tokens[i][: splits[0]]:
+                    bad += 1
+                    continue
+                bounds = splits + [len(chain)]
+                for j, k in enumerate(splits):
+                    end = bounds[j + 1]
+                    cont = Request(
+                        prompt=np.concatenate(
+                            [trace[i]["prompt"],
+                             np.asarray(chain[:k], np.int32)]
+                        ),
+                        max_new_tokens=trace[i]["max_new"] - k,
+                        sampling=SamplingParams(
+                            temperature=temperature, top_k=top_k,
+                            seed=seed + i,
+                        ),
+                        extras=modality_extras(
+                            cfg, np.random.default_rng(seed + i)
+                        ),
+                    )
+                    eng.run([cont])
+                    if chain[k:end] != list(cont.tokens)[: end - k]:
+                        bad += 1
+                        break
+            return bad
+
+        hrow, _ = cluster_row("cluster")
+        rows.append(hrow)
+        if inject == "kill_replica":
+            krow, kreqs = cluster_row(
+                "cluster-kill",
+                injector=FaultInjector(kill_replica=(0, kill_step)),
+            )
+            if temperature == 0.0:
+                krow["_resume_bad"] = verify_resumes(krow, kreqs)
+            rows.append(krow)
+    return rows
+
+
+def check_failover_rows(rows, *, tolerance: float = 0.5) -> int:
+    """Same-run single-vs-cluster-vs-kill gates (the --trace failover
+    contract).
+
+    - the single row and the healthy cluster row complete everything,
+      bit-identically (greedy: distribution across replicas must not
+      change a single token);
+    - the kill row loses exactly one replica to the injected fault and
+      ZERO requests silently: every request completes or carries a
+      structured rejection;
+    - kill-row requests that never failed over are bit-identical to the
+      single replay; failed-over requests carry a bit-identical credited
+      prefix and a resumed tail bit-identical to the reference engine's
+      replay of the same continuation (``_resume_bad == 0`` — see
+      :func:`run_failover_trace` on per-compute-path determinism);
+    - at least one failover happened and at least one resumed through a
+      prefix match on the survivor (``prefill_skipped > 0``);
+    - kill-row p95 TTFT over completed requests stays within
+      ``tolerance`` of the healthy row, plus a detection allowance of
+      4 x ``heartbeat_ms`` (a killed replica's waiters cannot be
+      re-routed before the deadline expires — that window is the cost of
+      detection, not a regression).
+    """
+    by_arch = {r["arch"]: r for r in rows if "arch" in r}
+    failures = 0
+    for arch, kill in by_arch.items():
+        if not arch.endswith("+cluster-kill"):
+            continue
+        label = arch[: -len("+cluster-kill")]
+        single = by_arch.get(f"{label}+single")
+        healthy = by_arch.get(f"{label}+cluster")
+        if single is None or healthy is None:
+            continue
+        checks = [
+            ("single_completes_all",
+             single["completed"] == single["n_requests"],
+             f"{single['completed']} == {single['n_requests']}"),
+            ("healthy_completes_all",
+             healthy["completed"] == healthy["n_requests"]
+             and healthy["replica_lost"] == 0,
+             f"{healthy['completed']} == {healthy['n_requests']}, "
+             f"deaths={healthy['replica_lost']}"),
+            ("kill_fired", kill["_fired"] == 1, f"{kill['_fired']} == 1"),
+            ("kill_replica_died", kill["replica_lost"] >= 1,
+             f"{kill['replica_lost']} >= 1"),
+            ("zero_silently_lost",
+             len(kill["_status"]) == kill["n_requests"]
+             and bool(kill["_rejects_structured"]),
+             "every request completed or carries a structured rejection"),
+            ("failover_observed", kill["failovers"] >= 1,
+             f"{kill['failovers']} >= 1"),
+            ("prefix_match_failover", kill["failovers_prefix_match"] >= 1,
+             f"{kill['failovers_prefix_match']} >= 1"),
+        ]
+        if healthy.get("_tokens") is not None:
+            checks.append(
+                ("healthy_bit_identical",
+                 healthy["_tokens"] == single["_tokens"],
+                 "healthy cluster tokens match the single-engine replay")
+            )
+        if kill.get("_tokens") is not None and single.get("_tokens") is not None:
+            exact = all(
+                got == want
+                for got, want, status, failed in zip(
+                    kill["_tokens"], single["_tokens"], kill["_status"],
+                    kill["_failed_over"],
+                )
+                if status == "ok" and not failed
+            )
+            checks.append(
+                ("unfailed_bit_identical", exact,
+                 "requests that never failed over match the single replay")
+            )
+            checks.append(
+                ("failover_resume_exact", kill["_resume_bad"] == 0,
+                 f"{kill['_resume_bad']} corrupt resumed stream(s): every "
+                 "credited prefix and replayed continuation must match")
+            )
+        allowance = 4.0 * kill["heartbeat_ms"]
+        ceil = healthy["p95_ttft_ms"] * (1.0 + tolerance) + allowance
+        checks.append(
+            ("p95_ttft_ms", kill["p95_ttft_ms"] <= ceil,
+             f"{kill['p95_ttft_ms']:.1f} <= {healthy['p95_ttft_ms']:.1f} "
+             f"+ {tolerance:.0%} + {allowance:.0f}ms detection")
+        )
+        for metric, ok, detail in checks:
+            print(
+                f"[perf-smoke] {label} failover {metric}: {detail} "
+                f"{'OK' if ok else 'VIOLATION'}"
+            )
+            failures += 0 if ok else 1
+    return failures
+
+
 def write_json(rows, json_path, *, config=None):
     """Write trace rows as the BENCH_serving.json result document."""
     keys = (
@@ -1042,8 +1417,13 @@ def write_json(rows, json_path, *, config=None):
         "prefill_chunks", "shared_hits", "cow_forks", "share_supported",
         "p95_ttft_ms", "completed", "shed", "errored", "degraded",
         "preempted", "quarantined", "cert_bound",
+        "replicas", "heartbeat_ms", "failovers", "failovers_prefix_match",
+        "replica_lost", "heartbeat_misses",
     )
-    if any("reprefill_tok" in r for r in rows):
+    # failover rows also carry "shed", so sniff their own key first
+    if any("failovers" in r for r in rows):
+        kind = "failover_trace"
+    elif any("reprefill_tok" in r for r in rows):
         kind = "sessions_trace"
     elif any("shed" in r for r in rows):
         kind = "overload_trace"
@@ -1229,7 +1609,18 @@ def emit_csv(rows, csv_path=None):
                     f";evictions={r['evictions']}"
                     f";cached_pages={r['cached_pages']}"
                 )
-            if "shed" in r:  # overload-trace columns
+            if "failovers" in r:  # failover-trace columns
+                extra += (
+                    f";p95_ttft_ms={r['p95_ttft_ms']:.0f}"
+                    f";completed={r['completed']}"
+                    f";shed={r['shed']}"
+                    f";replicas={r['replicas']}"
+                    f";failovers={r['failovers']}"
+                    f";prefix_match={r['failovers_prefix_match']}"
+                    f";replica_lost={r['replica_lost']}"
+                    f";heartbeat_misses={r['heartbeat_misses']}"
+                )
+            elif "shed" in r:  # overload-trace columns
                 extra += (
                     f";p95_ttft_ms={r['p95_ttft_ms']:.0f}"
                     f";completed={r['completed']}"
@@ -1283,7 +1674,7 @@ if __name__ == "__main__":
     )
     ap.add_argument(
         "--trace",
-        choices=["poisson", "sessions", "overload"],
+        choices=["poisson", "sessions", "overload", "failover"],
         default=None,
         help="replay an arrival trace through the continuous-batching "
         "engine: 'poisson' = independent requests; 'sessions' = "
@@ -1291,7 +1682,10 @@ if __name__ == "__main__":
         "then on) with the same-run session-cache gate; 'overload' = "
         "one burst replayed TWICE (plain FIFO, then tiered admission "
         "with deadline shedding and preemption) with the same-run "
-        "overload gate",
+        "overload gate; 'failover' = one system-prompt burst replayed "
+        "on a single engine, a healthy replica cluster, and (with "
+        "--inject kill_replica) a cluster losing a replica mid-burst, "
+        "with the same-run bit-exact failover gate",
     )
     ap.add_argument("--arch", default="llama3.2-1b",
                     help="comma-separated reduced arch ids (trace mode)")
@@ -1348,10 +1742,23 @@ if __name__ == "__main__":
     ap.add_argument("--tiers", default="1.0,0.5",
                     help="comma-separated rank fractions for the overload "
                     "trace's tiered row (first must be 1.0)")
-    ap.add_argument("--inject", choices=["nan"], default=None,
-                    help="overload trace: add a fault-injection row "
+    ap.add_argument("--inject", choices=["nan", "kill_replica"], default=None,
+                    help="overload trace ('nan'): add a fault-injection row "
                     "(one request's logits poisoned to NaN mid-decode) "
-                    "gated on exact single-request quarantine")
+                    "gated on exact single-request quarantine; failover "
+                    "trace ('kill_replica'): add a cluster row with "
+                    "replica 0 killed mid-burst, gated on bit-exact "
+                    "failover with zero silent losses")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="cluster size for the failover trace")
+    ap.add_argument("--heartbeat-ms", type=float, default=150.0,
+                    help="failover trace: replica heartbeat deadline floor")
+    ap.add_argument("--max-failovers", type=int, default=3,
+                    help="failover trace: per-request retry budget before "
+                    "a structured replica_lost rejection")
+    ap.add_argument("--kill-step", type=int, default=6,
+                    help="failover trace: replica-0 local step at which "
+                    "--inject kill_replica fires")
     ap.add_argument("--no-warmup", action="store_true",
                     help="include jit compile time in the trace row")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -1520,6 +1927,36 @@ if __name__ == "__main__":
             warmup=not args.no_warmup,
             inject=args.inject or "",
         )
+    elif args.trace == "failover":
+        # one invocation = single-engine reference + healthy cluster +
+        # (with --inject kill_replica) a kill row — gated against each
+        # other in the same run
+        page = args.page_size or 4
+        eff = dict(page_size=page, sys_prompt_len=args.sys_prompt_len,
+                   replicas=args.replicas, heartbeat_ms=args.heartbeat_ms,
+                   max_failovers=args.max_failovers, kill_step=args.kill_step,
+                   inject=args.inject or "")
+        arch_list = tuple(a.strip() for a in args.arch.split(",") if a.strip())
+        rows = run_failover_trace(
+            arch_list,
+            rate=args.rate,
+            n_requests=args.n_requests,
+            n_slots=args.n_slots,
+            n_replicas=args.replicas,
+            prompt_range=tuple(int(x) for x in args.prompt_range.split(",")),
+            gen_range=tuple(int(x) for x in args.gen_range.split(",")),
+            sys_prompt_len=args.sys_prompt_len,
+            page_size=page,
+            decode_block=args.decode_block,
+            heartbeat_ms=args.heartbeat_ms,
+            max_failovers=args.max_failovers,
+            kill_step=args.kill_step,
+            seed=args.seed,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            warmup=not args.no_warmup,
+            inject=args.inject or "",
+        )
     elif args.sweep_backends:
         rows = run_backend_sweep()
     else:
@@ -1570,3 +2007,9 @@ if __name__ == "__main__":
         n_bad = check_overload_rows(rows)
         if n_bad:
             sys.exit(f"[perf-smoke] {n_bad} overload gate(s) violated")
+    if args.trace == "failover":
+        # same-run: single engine vs healthy cluster vs kill row over the
+        # identical burst — the bit-exact failover contract
+        n_bad = check_failover_rows(rows, tolerance=args.tolerance)
+        if n_bad:
+            sys.exit(f"[perf-smoke] {n_bad} failover gate(s) violated")

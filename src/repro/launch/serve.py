@@ -35,6 +35,16 @@ new requests to a deeper tier under pressure instead of queueing them
 rejection; ``--preempt`` lets queue-head requests preempt lower-priority
 actives (their pages re-index as warm cache for bit-exact resume).
 
+``--replicas N`` serves through a :class:`repro.serving.Cluster`: N
+thread-backed engine replicas behind one shared admission queue with
+least-loaded routing, per-replica heartbeats (``--heartbeat-ms`` floor,
+deadline adapted from observed step times), and bit-exact failover — a
+dead replica's in-flight requests resume on survivors with at most
+``--max-failovers`` retries before a structured ``replica_lost``
+rejection.  ``--event-log PATH`` appends one JSON line per serving event
+(shed / degrade / preempt / quarantine / straggler / failover / replica
+life-cycle), so post-mortems read a log instead of scraping stdout.
+
 SIGINT/SIGTERM drain gracefully: the queue is shed with ``"shutdown"``
 rejections, active slots decode to completion, and the summary still
 prints — a second signal kills the process as usual.
@@ -110,6 +120,20 @@ def main(argv=None):
                     help="queue-head requests may preempt lower-priority "
                     "actives; preempted K/V re-indexes as warm cache for "
                     "bit-exact resume (requires --share-prefix)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind one shared admission queue "
+                    "(thread-backed; heartbeat failure detection + bit-exact "
+                    "failover; continuous engine only)")
+    ap.add_argument("--heartbeat-ms", type=float, default=1000.0,
+                    help="replica heartbeat deadline floor; the effective "
+                    "per-replica deadline adapts up from observed step times")
+    ap.add_argument("--max-failovers", type=int, default=2,
+                    help="failovers per request before it is rejected with "
+                    "reason='replica_lost'")
+    ap.add_argument("--event-log", default="",
+                    help="append one JSON line per serving event (shed, "
+                    "degrade, preempt, quarantine, straggler, failover, "
+                    "replica life-cycle) to this path")
     ap.add_argument("--close-sessions", action="store_true",
                     help="after the run, drop each prompt's cached prefix "
                     "branch (the session-close hook) and report freed pages "
@@ -168,8 +192,9 @@ def main(argv=None):
               f"kernels={dcfg.backend})")
         print("first sequences:", out[: min(2, args.batch), :12].tolist())
     else:
-        from repro.serving import Engine, Request, SamplingParams
+        from repro.serving import Cluster, Engine, EventLog, Request, SamplingParams
         from repro.serving.engine import AdmissionPolicy, percentile
+        from repro.serving.scheduler import FailoverBudget
 
         tiers = tuple(float(f) for f in args.tiers.split(",") if f) or None
         admission = None
@@ -180,15 +205,36 @@ def main(argv=None):
                 degrade_free_frac=args.degrade_free_frac or None,
             )
         n_slots = args.n_slots or args.batch
-        eng = Engine(model, params, n_slots=n_slots, max_len=max_len, dispatch=dcfg,
-                     decode_block=args.decode_block,
-                     page_size=args.page_size or None,
-                     kv_pages=args.kv_pages or None,
-                     prefill_chunk=args.prefill_chunk or None,
-                     share_prefix=args.share_prefix,
-                     warm_cache_pages=args.warm_cache_pages or None,
-                     tiers=tiers, tier_q=args.tier_q,
-                     admission=admission, preempt=args.preempt)
+        event_log = EventLog(args.event_log) if args.event_log else None
+
+        def make_engine(rid=0):
+            return Engine(model, params, n_slots=n_slots, max_len=max_len,
+                          dispatch=dcfg,
+                          decode_block=args.decode_block,
+                          page_size=args.page_size or None,
+                          kv_pages=args.kv_pages or None,
+                          prefill_chunk=args.prefill_chunk or None,
+                          share_prefix=args.share_prefix,
+                          warm_cache_pages=args.warm_cache_pages or None,
+                          tiers=tiers, tier_q=args.tier_q,
+                          admission=admission, preempt=args.preempt)
+
+        cluster = None
+        if args.replicas > 1:
+            cluster = Cluster(
+                make_engine, args.replicas,
+                heartbeat_ms=args.heartbeat_ms,
+                budget=FailoverBudget(max_failovers=args.max_failovers,
+                                      base_ms=10.0),
+                event_log=event_log,
+            )
+            eng = cluster.replicas[0].eng  # summary counters below aggregate
+        else:
+            eng = make_engine()
+            if event_log is not None:
+                sink = event_log.sink()
+                eng.on_event = sink
+                eng.scheduler.on_event = sink
         np_batch = {k: np.asarray(v) for k, v in batch.items()}
         reqs = []
         for b in range(args.batch):
@@ -226,12 +272,25 @@ def main(argv=None):
 
         t0 = time.time()
         try:
-            done = eng.run(reqs, stop=lambda: draining["on"])
+            if cluster is not None:
+                done = cluster.run(reqs, stop=lambda: draining["on"])
+                cluster.close()
+            else:
+                done = eng.run(reqs, stop=lambda: draining["on"])
         finally:
             for s, h in prev_handlers.items():
                 if signal.getsignal(s) == _drain:
                     signal.signal(s, h)
         dt = time.time() - t0
+        engines = [r.eng for r in cluster.replicas] if cluster is not None else [eng]
+        if cluster is not None:
+            print(f"[cluster] replicas={args.replicas} "
+                  f"failovers={cluster.failovers} "
+                  f"prefix_match={cluster.failovers_prefix_match} "
+                  f"replica_deaths={cluster.replica_deaths} "
+                  f"heartbeat_misses={cluster.heartbeat_misses} "
+                  f"rejoins={cluster.rejoins} "
+                  f"replica_lost_rejections={cluster.exhausted}")
         ok = [r for r in done if r.status == "ok"]
         shed = [r for r in done if r.status == "shed"]
         errored = [r for r in done if r.status == "error"]
@@ -267,27 +326,37 @@ def main(argv=None):
             if lats
             else "p50=n/a p95=n/a (0 completed)"
         )
+        steps_t = sum(e.steps for e in engines)
+        syncs_t = sum(e.host_syncs for e in engines)
+        dec_t = sum(e.decoded_tokens for e in engines)
         print(f"latency {lat_s} "
-              f"decode_steps={eng.steps} host_syncs={eng.host_syncs} "
-              f"tok_per_sync={eng.tokens_per_sync:.1f} "
-              f"util={eng.batch_utilization:.3f}")
-        if eng.paged:
-            print(f"[paged] page_size={eng.page_size} pool={eng.kv_pages} pages "
-                  f"peak_pages={eng.peak_pages_in_use} "
-                  f"peak_active={eng.peak_active} "
-                  f"prefill_chunks={eng.prefill_chunks} "
-                  f"kv_bytes_cap={eng.kv_bytes_capacity}")
+              f"decode_steps={steps_t} host_syncs={syncs_t} "
+              f"tok_per_sync={dec_t / max(syncs_t, 1):.1f} "
+              f"util={sum(e.batch_utilization for e in engines) / len(engines):.3f}")
+        for i, e in enumerate(engines):
+            tag = f"[paged r{i}]" if cluster is not None else "[paged]"
+            if not e.paged:
+                continue
+            print(f"{tag} page_size={e.page_size} pool={e.kv_pages} pages "
+                  f"peak_pages={e.peak_pages_in_use} "
+                  f"peak_active={e.peak_active} "
+                  f"prefill_chunks={e.prefill_chunks} "
+                  f"kv_bytes_cap={e.kv_bytes_capacity}")
             if args.share_prefix:
-                print(f"[shared] shared_pages={eng.shared_page_hits} "
-                      f"cow_forks={eng.cow_forks} "
-                      f"matched_admissions={eng.shared_admissions} "
-                      f"prefill_tok_skipped={eng.skipped_prefill_tokens} "
-                      f"cached_pages={eng.prefix_cached_pages} "
-                      f"evictions={eng.prefix_evictions}")
-            if args.close_sessions and args.share_prefix:
-                freed = sum(eng.drop_session(r.prompt) for r in done)
-                print(f"[sessions] closed {len(done)}, freed {freed} cached "
-                      f"pages (cached now {eng.prefix_cached_pages})")
+                print(f"[shared{' r%d' % i if cluster is not None else ''}] "
+                      f"shared_pages={e.shared_page_hits} "
+                      f"cow_forks={e.cow_forks} "
+                      f"matched_admissions={e.shared_admissions} "
+                      f"prefill_tok_skipped={e.skipped_prefill_tokens} "
+                      f"cached_pages={e.prefix_cached_pages} "
+                      f"evictions={e.prefix_evictions}")
+        if args.close_sessions and args.share_prefix and cluster is None:
+            freed = sum(eng.drop_session(r.prompt) for r in done)
+            print(f"[sessions] closed {len(done)}, freed {freed} cached "
+                  f"pages (cached now {eng.prefix_cached_pages})")
+        if event_log is not None:
+            event_log.close()
+            print(f"[events] JSON lines appended to {args.event_log}")
         ok_done = ok if ok else done
         if ok_done and ok_done[0].tokens:
             out = np.asarray([ok_done[0].tokens], np.int32)

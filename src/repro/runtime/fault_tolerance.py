@@ -11,6 +11,7 @@ heartbeat source is a local clock and failure injection is explicit).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -23,7 +24,32 @@ __all__ = [
     "ElasticReshard",
     "TrainLoopRunner",
     "FaultInjector",
+    "ReplicaKilled",
+    "backoff_s",
 ]
+
+
+def backoff_s(
+    attempt: int,
+    *,
+    base_s: float,
+    cap_s: float,
+    salt: int = 0,
+) -> float:
+    """Capped exponential backoff with DETERMINISTIC jitter.
+
+    ``base_s * 2**attempt`` capped at ``cap_s``, scaled by a jitter factor
+    in [0.5, 1.0] derived from a hash of ``(salt, attempt)`` — so retries
+    de-synchronize across requests/replicas (different salts) while every
+    run of the same (salt, attempt) pair sleeps the identical duration
+    (reproducible traces; no global RNG state touched).
+    """
+    if base_s <= 0:
+        return 0.0
+    raw = min(base_s * (2.0 ** max(attempt, 0)), cap_s)
+    h = hashlib.blake2b(f"{salt}:{attempt}".encode(), digest_size=8).digest()
+    frac = 0.5 + (int.from_bytes(h, "big") / 2.0**64) * 0.5
+    return raw * frac
 
 
 @dataclasses.dataclass
@@ -57,27 +83,70 @@ class StepWatchdog:
 
 
 class RetryableStep:
-    """Wrap a step function with bounded retries.
+    """Wrap a step function with bounded retries and capped-exponential
+    backoff.
 
     On real fleets the caught class is jaxlib XlaRuntimeError (preempted
     replica / link flap); tests inject arbitrary exceptions.  After
     ``max_retries`` consecutive failures the error propagates to the restart
     loop, which falls back to the last checkpoint.
+
+    Backoff is OFF by default (``base_delay_s=0``): the train restart loop
+    retries hot, matching the historical behaviour.  The serving cluster
+    arms it (``base_delay_s > 0``) so failover retries de-synchronize:
+    attempt ``k`` sleeps ``backoff_s(k, base_s, cap_s, salt=jitter_salt)``
+    — capped exponential with deterministic jitter.  ``sleep`` is
+    injectable so tests record delays instead of waiting them out.
     """
 
-    def __init__(self, fn: Callable, *, max_retries: int = 2, retryable=(Exception,)):
+    def __init__(
+        self,
+        fn: Callable,
+        *,
+        max_retries: int = 2,
+        retryable=(Exception,),
+        base_delay_s: float = 0.0,
+        max_delay_s: float = 1.0,
+        jitter_salt: int = 0,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
         self.fn, self.max_retries, self.retryable = fn, max_retries, retryable
-        self.total_retries = 0
+        self.base_delay_s = base_delay_s
+        self.max_delay_s = max_delay_s
+        self.jitter_salt = jitter_salt
+        self._sleep = sleep
+        self.total_retries = 0   # failures observed (counts the final one too)
+        self.total_attempts = 0  # calls into fn
+        self.backoffs = 0        # sleeps actually taken
+        self.total_backoff_s = 0.0
 
     def __call__(self, *args, **kw):
         for attempt in range(self.max_retries + 1):
+            self.total_attempts += 1
             try:
                 return self.fn(*args, **kw)
             except self.retryable:
                 self.total_retries += 1
                 if attempt == self.max_retries:
                     raise
+                delay = backoff_s(
+                    attempt,
+                    base_s=self.base_delay_s,
+                    cap_s=self.max_delay_s,
+                    salt=self.jitter_salt,
+                )
+                if delay > 0:
+                    self.backoffs += 1
+                    self.total_backoff_s += delay
+                    self._sleep(delay)
         raise AssertionError("unreachable")
+
+
+class ReplicaKilled(RuntimeError):
+    """Raised inside a replica's step loop by ``FaultInjector.kill_replica``
+    — simulates a process/device loss.  The cluster treats any exception
+    escaping a replica step as fatal to that replica; this type exists so
+    tests can tell injected kills from genuine bugs."""
 
 
 @dataclasses.dataclass
@@ -85,7 +154,7 @@ class FaultInjector:
     """Deterministic fault injection for the serving engine (tests and
     ``benchmarks/serving.py --inject``).
 
-    Three fault classes, each armed independently:
+    Engine-level fault classes, each armed independently:
 
     ``nan_logits = (uid, device_step)`` — poison request ``uid``'s logits
     to NaN at global decode step ``device_step`` (the engine's cumulative
@@ -103,6 +172,23 @@ class FaultInjector:
     engine step in the window, simulating a straggling device so
     wall-clock deadlines expire under load.
 
+    Replica-level fault classes (serving cluster; step indices here are
+    the REPLICA's local step counter, checked via ``on_replica_step``):
+
+    ``kill_replica = (replica, local_step)`` — raise :class:`ReplicaKilled`
+    from replica ``replica``'s step loop at exactly ``local_step``,
+    simulating a dead process; the cluster must fail its in-flight
+    requests over to survivors.
+
+    ``hang_replica = (replica, local_step)`` with ``hang_s`` — block the
+    replica's step loop for ``hang_s`` seconds once, simulating a wedged
+    device: no exception, the heartbeat just stops, and the monitor must
+    catch it via the deadline.
+
+    ``slow_replica = (replica, start, stop)`` with ``slow_ms`` — sleep
+    ``slow_ms`` before each step in ``[start, stop)`` on that replica
+    only, simulating a straggler that the watchdog flags.
+
     ``fired`` counts what actually triggered, so a test that armed a
     fault can assert the fault genuinely happened.
     """
@@ -111,6 +197,10 @@ class FaultInjector:
     deny_pages: Optional[Tuple[int, int]] = None
     slow_steps: Optional[Tuple[int, int]] = None
     slow_ms: float = 0.0
+    kill_replica: Optional[Tuple[int, int]] = None
+    hang_replica: Optional[Tuple[int, int]] = None
+    hang_s: float = 0.5
+    slow_replica: Optional[Tuple[int, int, int]] = None
     fired: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def _hit(self, kind: str) -> None:
@@ -134,6 +224,29 @@ class FaultInjector:
         if a <= step_idx < b:
             self._hit("slow_step")
             time.sleep(self.slow_ms / 1e3)
+
+    def on_replica_step(self, replica: int, step_idx: int) -> None:
+        """Replica-step hook (cluster path): applies replica-level faults.
+
+        Called by the replica thread BEFORE it steps its engine, with the
+        replica id and that replica's local step counter.  Raising here is
+        equivalent to the engine step itself raising.
+        """
+        if self.kill_replica is not None:
+            rid, at = self.kill_replica
+            if replica == rid and step_idx == at:
+                self._hit("kill_replica")
+                raise ReplicaKilled(f"injected kill: replica {rid} at step {at}")
+        if self.hang_replica is not None:
+            rid, at = self.hang_replica
+            if replica == rid and step_idx == at:
+                self._hit("hang_replica")
+                time.sleep(self.hang_s)
+        if self.slow_replica is not None:
+            rid, a, b = self.slow_replica
+            if replica == rid and a <= step_idx < b and self.slow_ms > 0:
+                self._hit("slow_replica")
+                time.sleep(self.slow_ms / 1e3)
 
     def poison_for(self, uid_of_slot: Callable[[int], Optional[int]],
                    n_slots: int, steps_done: int, block: int) -> Tuple[int, int]:

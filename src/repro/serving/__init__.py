@@ -10,14 +10,22 @@ Public surface:
     admission control (slot- and page-gated, refcounted pages)
   * :class:`PrefixIndex` / :class:`PageGrant` — prompt-prefix page index
     and the reservation record shared-prefix admission hands the scheduler
+  * :class:`Cluster` / :class:`EventLog` — N thread-backed engine replicas
+    behind one shared queue: heartbeat failure detection, bit-exact
+    failover with capped-backoff retry budgets, JSON-lines event log
+  * :class:`RoutingPolicy` / :class:`FailoverBudget` — the cluster's
+    least-loaded routing and per-request failover accounting
 """
 
+from repro.serving.cluster import Cluster, EventLog
 from repro.serving.engine import Engine, Request
 from repro.serving.sampling import SamplingParams, sample_tokens
 from repro.serving.scheduler import (
+    FailoverBudget,
     PageAllocator,
     PageGrant,
     PrefixIndex,
+    RoutingPolicy,
     Scheduler,
     SlotAllocator,
 )
@@ -32,4 +40,8 @@ __all__ = [
     "PageAllocator",
     "PageGrant",
     "PrefixIndex",
+    "Cluster",
+    "EventLog",
+    "RoutingPolicy",
+    "FailoverBudget",
 ]

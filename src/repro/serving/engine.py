@@ -80,7 +80,7 @@ import numpy as np
 from repro.core.bounds import CompressionCertificate, certify_tier
 from repro.core.lowrank import is_lowrank, slice_rank
 from repro.runtime.dispatch import DispatchConfig, use_dispatch
-from repro.runtime.fault_tolerance import FaultInjector
+from repro.runtime.fault_tolerance import FaultInjector, StepWatchdog
 from repro.serving.sampling import (
     SALT_MULT,
     SamplingParams,
@@ -355,6 +355,8 @@ class Engine:
         admission: Optional[AdmissionPolicy] = None,
         injector: Optional[FaultInjector] = None,
         preempt: bool = False,
+        watchdog: Optional[StepWatchdog] = None,
+        on_event: Optional[Callable[[str, dict], None]] = None,
     ):
         self.model, self.params = model, params
         self.cfg = model.cfg
@@ -392,6 +394,15 @@ class Engine:
         self.admission = admission
         self.injector = injector
         self.preempt = preempt
+        # health instrumentation: the watchdog times every step() so a
+        # stalled fused block flags instead of hanging run() silently; the
+        # cluster reads .median/.durations as the heartbeat baseline.  A
+        # plain attribute — the cluster may attach one post-construction.
+        self.watchdog = watchdog
+        # structured-event sink shared with the scheduler (see Cluster's
+        # EventLog); None keeps the hot path branch-free in spirit — one
+        # `is not None` check per event site.
+        self.on_event = on_event
 
         self.paged = page_size is not None
         self.page_size = page_size
@@ -468,6 +479,7 @@ class Engine:
             self.scheduler = Scheduler(SlotAllocator(n_slots), policy=admission)
             with use_dispatch(self._dcfg):
                 self.cache = model.init_cache(n_slots, max_len)
+        self.scheduler.on_event = on_event
         # byte accounting: paged leaves are banked per PAGE, everything else
         # (slot-resident leaves, flat pools) is resident up front
         paged_leaves = (
@@ -527,6 +539,8 @@ class Engine:
         # overload/robustness accounting
         self.preemptions = 0  # slots preempted for higher-priority waiters
         self.quarantined = 0  # requests errored out on non-finite logits
+        self.straggler_flags = 0  # watchdog-flagged slow steps
+        self.exported = 0  # in-flight requests evicted via export_inflight
         self._step_idx = 0  # engine step() invocations (injector clock)
 
     def _free_page_frac(self) -> float:
@@ -802,6 +816,8 @@ class Engine:
         self.prefill_chunks = 0
         self.shared_page_hits = self.cow_forks = self.shared_admissions = 0
         self.skipped_prefill_tokens = 0
+        self.straggler_flags = 0
+        self.exported = 0
         self.peak_active = self.scheduler.allocator.n_active
         if self.paged:
             self.page_pool.reset_peak()
@@ -1252,7 +1268,30 @@ class Engine:
         long prompts routed to the chunked-prefill queue), run at most one
         prefill chunk, then one fused decode block (up to ``decode_block``
         tokens per active slot with a single host round-trip); returns the
-        requests that finished during this step."""
+        requests that finished during this step.
+
+        When a :class:`StepWatchdog` is attached, every step is timed and
+        fed to it: a step slower than the watchdog's straggler threshold
+        bumps ``straggler_flags`` and emits a ``"straggler"`` event — the
+        health signal the cluster's heartbeat monitor consumes, instead of
+        a stalled fused block hanging ``run()`` silently.
+        """
+        if self.watchdog is None:
+            return self._step_inner()
+        t0 = time.monotonic()
+        finished = self._step_inner()
+        if self.watchdog.observe(self._step_idx, time.monotonic() - t0):
+            self.straggler_flags += 1
+            if self.on_event is not None:
+                self.on_event(
+                    "straggler",
+                    {"step": self._step_idx,
+                     "seconds": round(self.watchdog.durations[-1], 6),
+                     "median_s": round(self.watchdog.median, 6)},
+                )
+        return finished
+
+    def _step_inner(self) -> List[Request]:
         finished: List[Request] = []
         self._step_idx += 1
         if self.injector is not None:
@@ -1461,20 +1500,23 @@ class Engine:
             placed.extend(more)
         return placed
 
-    def _preempt_slot(self, slot: int) -> None:
-        """Evict one running request, preserving its work.
+    def _evict_slot(self, slot: int) -> Request:
+        """Evict one running request, preserving its work, and return the
+        CONTINUATION that resumes it (the caller decides where it goes —
+        back into this engine's queue for preemption, or onto another
+        replica for failover).
 
-        Its decode-filled FULL pages go through the standard release path
-        — rematerialized through the prefill program and registered in the
-        tier's prefix index — so the re-queued continuation's admission
-        matches them read-only and prefills ONLY the unshared tail (plus
-        the partial last page).  The continuation extends the original
-        request's stream under the original uid/submit-time/tier, queued
-        right behind the preemptor (index 1): under greedy decoding the
-        resumed stream is bit-identical to an uninterrupted run, because
-        prefilling the extended prompt reproduces the same argmax chain.
-        Sampled (temperature > 0) streams resume with a fresh salt chain —
-        preemption guarantees greedy parity, not sampled-stream parity.
+        The evicted slot's decode-filled FULL pages go through the
+        standard release path — rematerialized through the prefill program
+        and registered in the tier's prefix index — so the continuation's
+        admission matches them read-only and prefills ONLY the unshared
+        tail (plus the partial last page).  The continuation extends the
+        original request's stream under the original uid/submit-time/tier:
+        under greedy decoding the resumed stream is bit-identical to an
+        uninterrupted run, because prefilling the extended prompt
+        reproduces the same argmax chain.  Sampled (temperature > 0)
+        streams resume with a fresh salt chain — eviction guarantees
+        greedy parity, not sampled-stream parity.
         """
         req = self._reqs[slot]
         if self._share and len(req.tokens) > 1:
@@ -1505,8 +1547,83 @@ class Engine:
         cont.uid = req.uid
         cont.t_submit = req.t_submit
         cont._parent = root
+        return cont
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Preempt one running request for a higher-priority waiter: evict
+        it and re-queue the continuation right behind the preemptor
+        (index 1)."""
+        cont = self._evict_slot(slot)
         self.scheduler.queue.insert(1, cont)
         self.preemptions += 1
+        if self.on_event is not None:
+            self.on_event(
+                "preempt",
+                {"uid": cont.uid, "emitted": len(cont._parent.tokens),
+                 "remaining": cont.max_new_tokens},
+            )
+
+    def snapshot_inflight(self) -> List[dict]:
+        """Non-destructive view of every in-flight request (active slots
+        plus mid-chunked-prefill ones) — the cluster monitor's source for
+        failover accounting; touches no engine state."""
+        out = []
+        for slot, entry in self._chunking.items():
+            req = entry[0]
+            out.append(
+                {"uid": req.uid, "slot": slot, "emitted": 0,
+                 "remaining": req.max_new_tokens, "tier": req.tier,
+                 "chunking": True}
+            )
+        for slot in range(self.n_slots):
+            req = self._reqs[slot]
+            if req is None:
+                continue
+            out.append(
+                {
+                    "uid": req.uid,
+                    "slot": slot,
+                    "emitted": len(req.tokens),
+                    "remaining": req.max_new_tokens - len(req.tokens),
+                    "tier": req.tier,
+                    "chunking": False,
+                }
+            )
+        return out
+
+    def take_queue(self) -> List[Request]:
+        """Remove and return every QUEUED (never admitted) request — the
+        first half of an externally-driven drain.  The caller now owns
+        their completion (re-route or shed); this engine will not touch
+        them again."""
+        out = list(self.scheduler.queue)
+        self.scheduler.queue.clear()
+        return out
+
+    def export_inflight(self) -> List[Request]:
+        """Evict EVERY in-flight request and return the requests to resume
+        elsewhere — the second half of an externally-driven drain (cluster
+        failover path).
+
+        Mid-chunked-prefill slots have emitted nothing, so their ORIGINAL
+        request is returned verbatim (a cold re-prefill elsewhere loses no
+        work); active decode slots go through :meth:`_evict_slot`, whose
+        continuation resumes bit-exactly under greedy decoding.  All slots
+        and pages are released — the engine is left with no in-flight
+        state, so ``PageAllocator`` invariants hold even when the export
+        happens mid-fault.
+        """
+        out: List[Request] = []
+        for slot in list(self._chunking):
+            req = self._chunking.pop(slot)[0]
+            self._clear_slot(slot)
+            out.append(req)
+            self.exported += 1
+        for slot in range(self.n_slots):
+            if self._reqs[slot] is not None:
+                out.append(self._evict_slot(slot))
+                self.exported += 1
+        return out
 
     def _quarantine_slot(self, slot: int) -> Request:
         """Error-out one request whose decode went non-finite.
@@ -1523,6 +1640,11 @@ class Engine:
         req.error = "non-finite logits during decode"
         self._clear_slot(slot)
         self.quarantined += 1
+        if self.on_event is not None:
+            self.on_event(
+                "quarantine",
+                {"uid": req.uid, "emitted": len(req.tokens), "slot": slot},
+            )
         return self._finalize(req)
 
     def drop_session(self, prompt) -> int:

@@ -63,6 +63,8 @@ __all__ = [
     "Scheduler",
     "AdmissionPolicy",
     "RejectedOverload",
+    "RoutingPolicy",
+    "FailoverBudget",
 ]
 
 
@@ -676,6 +678,51 @@ class AdmissionPolicy:
         return max(base, cap)
 
 
+@dataclasses.dataclass
+class RoutingPolicy:
+    """Load-aware replica routing for the cluster front door.
+
+    ``pick`` receives one ``(replica_id, queue_depth, pages_used)`` triple
+    per HEALTHY replica and returns the replica id to route the next
+    request to: least queue depth first (waiters dominate TTFT), then
+    least pages used (KV footprint approximates outstanding decode work),
+    then lowest id — a total order, so routing is deterministic for a
+    deterministic trace.
+    """
+
+    def pick(self, loads: List[Tuple[int, int, int]]) -> int:
+        if not loads:
+            raise ValueError("no healthy replicas to route to")
+        return min(loads, key=lambda t: (t[1], t[2], t[0]))[0]
+
+
+@dataclasses.dataclass
+class FailoverBudget:
+    """Per-request failover accounting for the cluster.
+
+    A request whose replica dies is re-enqueued at most ``max_failovers``
+    times; each re-enqueue is delayed by capped exponential backoff with
+    deterministic jitter (same formula as ``runtime.fault_tolerance``,
+    duplicated here because the scheduler layer stays jax-import-free):
+    attempt ``k`` waits ``min(base_ms * 2**k, cap_ms)`` scaled by a factor
+    in [0.5, 1.0] hashed from ``(salt, k)`` — typically salted with the
+    request uid so concurrent failovers of different requests spread out
+    instead of thundering back in lockstep.
+    """
+
+    max_failovers: int = 2
+    base_ms: float = 0.0
+    cap_ms: float = 250.0
+
+    def backoff_ms(self, attempt: int, salt: int = 0) -> float:
+        if self.base_ms <= 0:
+            return 0.0
+        raw = min(self.base_ms * (2.0 ** max(attempt, 0)), self.cap_ms)
+        h = hashlib.blake2b(f"{salt}:{attempt}".encode(), digest_size=8).digest()
+        frac = 0.5 + (int.from_bytes(h, "big") / 2.0**64) * 0.5
+        return raw * frac
+
+
 class Scheduler:
     """FIFO admission control on top of a :class:`SlotAllocator`.
 
@@ -724,6 +771,10 @@ class Scheduler:
         self.queue: Deque = collections.deque()
         self.shed: List = []
         self.degraded = 0  # admissions the policy moved to a cheaper tier
+        # optional structured-event sink: on_event(kind, fields_dict).
+        # Installed by Engine/Cluster when an event log is configured;
+        # must never raise (post-mortem plumbing, not control flow).
+        self.on_event: Optional[Callable[[str, dict], None]] = None
 
     @property
     def n_waiting(self) -> int:
@@ -750,6 +801,16 @@ class Scheduler:
             deadline_ms=getattr(request, "deadline_ms", None),
         )
         self.shed.append(request)
+        if self.on_event is not None:
+            self.on_event(
+                "shed",
+                {
+                    "uid": request.uid,
+                    "reason": reason,
+                    "waited_ms": round(request.rejected.waited_ms, 3),
+                    "queue_depth": request.rejected.queue_depth,
+                },
+            )
 
     def _shed_expired(self) -> None:
         now = time.perf_counter()
@@ -781,6 +842,12 @@ class Scheduler:
                 if tier > getattr(req, "tier", 0):
                     self.degraded += 1
                     req.tier = tier
+                    if self.on_event is not None:
+                        self.on_event(
+                            "degrade",
+                            {"uid": req.uid, "tier": tier,
+                             "queue_depth": len(self.queue), "free_frac": round(free_frac, 4)},
+                        )
             if self.reserve is not None:
                 grant = self.reserve(req)
                 if grant is None:  # page exhaustion queues; strict FIFO

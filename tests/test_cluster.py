@@ -1,0 +1,475 @@
+"""Replicated serving cluster: failure detection, failover, recovery.
+
+Covers the cluster's acceptance contract:
+  * pure-level routing (least-loaded total order) and failover backoff
+    (capped exponential, deterministic jitter)
+  * heartbeat-miss detection (hang fault), kill and slow/straggler faults
+  * retry-budget exhaustion -> structured ``replica_lost`` rejection
+  * probation rejoin state machine and ``restart_replica``
+  * cross-replica resume for every chunk-capable arch
+
+Bit-exactness is asserted PER COMPUTE PATH (the same contract the
+``--trace failover`` benchmark gates): an unfailed request must match the
+single-engine replay exactly; a failed-over request must have a
+bit-identical credited prefix, and a resumed tail bit-identical to what a
+fresh engine emits for that continuation.  The uninterrupted replay may
+legitimately diverge from a resumed tail at an argmax near-tie, because
+prefill-written and decode-written KV differ in low-order bits.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.data.synthetic import modality_extras
+from repro.models.model import build_model
+from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    ReplicaKilled,
+    StepWatchdog,
+)
+from repro.serving import (
+    Cluster,
+    Engine,
+    FailoverBudget,
+    Request,
+    RoutingPolicy,
+)
+
+MAX_LEN = 32
+ENG_KW = dict(
+    n_slots=2, max_len=MAX_LEN, page_size=4, prefill_chunk=4,
+    decode_block=2, share_prefix=True,
+)
+
+
+# --------------------------------------------------------------------------- #
+# pure level: routing + backoff
+# --------------------------------------------------------------------------- #
+def test_routing_policy_least_loaded_total_order():
+    pol = RoutingPolicy()
+    # least queue depth dominates
+    assert pol.pick([(0, 3, 0), (1, 1, 99)]) == 1
+    # depth tie -> least pages
+    assert pol.pick([(0, 2, 8), (1, 2, 3)]) == 1
+    # full tie -> lowest id (deterministic routing for a fixed trace)
+    assert pol.pick([(2, 1, 4), (0, 1, 4), (1, 1, 4)]) == 0
+    with pytest.raises(ValueError):
+        pol.pick([])
+
+
+def test_failover_budget_backoff_deterministic_capped():
+    # base 0 (the default) never sleeps: unit tests stay instant
+    assert FailoverBudget().backoff_ms(0) == 0.0
+    assert FailoverBudget().backoff_ms(5, salt=7) == 0.0
+
+    b = FailoverBudget(max_failovers=3, base_ms=10.0, cap_ms=50.0)
+    for attempt in range(6):
+        for salt in (0, 1, 17):
+            raw = min(10.0 * 2.0 ** attempt, 50.0)
+            d = b.backoff_ms(attempt, salt=salt)
+            # deterministic: same (attempt, salt) -> same delay
+            assert d == b.backoff_ms(attempt, salt=salt)
+            # jitter keeps the delay in [raw/2, raw], under the cap
+            assert raw / 2 <= d <= raw <= 50.0
+    # different salts actually spread (thundering-herd jitter is real)
+    ds = {b.backoff_ms(2, salt=s) for s in range(8)}
+    assert len(ds) > 1
+
+
+# --------------------------------------------------------------------------- #
+# shared fixtures / helpers (one reduced llama for every cluster test)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def llama():
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _factory(model, params):
+    def make(_rid: int) -> Engine:
+        return Engine(model, params, **ENG_KW)
+
+    return make
+
+
+def _warm(eng, cfg, seed=123):
+    """Compile the engine's programs, then reseed its watchdog with
+    post-compile step times so the cluster's adaptive heartbeat deadline
+    reflects steady-state speed, not XLA's first-trace latency.
+
+    Warmup must cover every shape a FAILOVER can later trigger: resumed
+    prompts (``prompt + emitted``) land on every partial-chunk residue
+    mod ``page_size``, and a fresh compile mid-run is a multi-second
+    stall the tightened heartbeat deadline would misread as a death."""
+    rng = np.random.default_rng(seed)
+
+    def mk(length):
+        return Request(
+            prompt=rng.integers(0, cfg.vocab, size=(length,)).astype(np.int32),
+            max_new_tokens=8, extras=modality_extras(cfg, rng),
+        )
+
+    for length in (5, 6, 7, 8):  # chunk residues 1, 2, 3 and full-chunk
+        eng.run([mk(length)])
+    # prompts <= prefill_chunk ride the MONOLITHIC grouped-prefill program
+    # (bucketed (G, P) shapes) — cover both group sizes of it too
+    eng.run([mk(4)])
+    eng.run([mk(4) for _ in range(eng.n_slots)])
+    eng.run([mk(6) for _ in range(eng.n_slots)])  # full decode group
+    eng.watchdog = StepWatchdog()  # drop compile-time spikes
+    eng.run([mk(6)])
+    eng.reset_prefix_cache()
+    eng.reset_counters()
+
+
+def _trace(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        dict(
+            prompt=rng.integers(
+                0, cfg.vocab, size=(int(rng.integers(4, 7)),)
+            ).astype(np.int32),
+            max_new=int(rng.integers(8, 12)),
+        )
+        for _ in range(n)
+    ]
+
+
+def _build(trace, cfg, seed=0):
+    return [
+        Request(
+            prompt=t["prompt"].copy(), max_new_tokens=t["max_new"],
+            extras=modality_extras(cfg, np.random.default_rng(seed + i)),
+        )
+        for i, t in enumerate(trace)
+    ]
+
+
+def _reference(trace, cfg, model, params, seed=0):
+    eng = Engine(model, params, **ENG_KW)
+    _warm(eng, cfg)
+    reqs = _build(trace, cfg, seed)
+    eng.run(reqs)
+    assert all(r.status == "ok" for r in reqs)
+    return eng, [list(r.tokens) for r in reqs]
+
+
+def _check_streams(clu, reqs, refs, trace, cfg, replay_eng, seed=0):
+    """The per-compute-path token contract (see module docstring)."""
+    n_failed_over = 0
+    for i, r in enumerate(reqs):
+        assert r.status == "ok", f"req {i}: {r.status} ({r.rejected})"
+        got = list(r.tokens)
+        assert len(got) == trace[i]["max_new"]
+        splits = clu.resume_points.get(r.uid)
+        if not splits:
+            assert got == refs[i], f"unfailed req {i} diverged from replay"
+            continue
+        n_failed_over += 1
+        assert got[: splits[0]] == refs[i][: splits[0]], (
+            f"req {i}: credited prefix not bit-identical"
+        )
+        bounds = list(splits) + [len(got)]
+        for j, k in enumerate(splits):
+            end = bounds[j + 1]
+            if end <= k:
+                continue  # replica died before the resume emitted anything
+            cont = Request(
+                prompt=np.concatenate(
+                    [trace[i]["prompt"], np.asarray(got[:k], np.int32)]
+                ),
+                max_new_tokens=trace[i]["max_new"] - k,
+                extras=modality_extras(cfg, np.random.default_rng(seed + i)),
+            )
+            replay_eng.reset_prefix_cache()
+            replay_eng.run([cont])
+            assert got[k:end] == list(cont.tokens)[: end - k], (
+                f"req {i}: resumed tail diverged from the continuation replay"
+            )
+    return n_failed_over
+
+
+def _drive_to_healthy(clu, rid, timeout_s=10.0):
+    """Poll the monitor until replica ``rid`` rejoins the router."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        clu.check_health()
+        if clu.replicas[rid].state == "healthy":
+            return
+        time.sleep(0.01)
+    pytest.fail(
+        f"replica {rid} never rejoined (state={clu.replicas[rid].state})"
+    )
+
+
+# --------------------------------------------------------------------------- #
+# kill fault: failover + restart
+# --------------------------------------------------------------------------- #
+def test_cluster_kill_failover_and_restart(llama):
+    cfg, model, params = llama
+    trace = _trace(cfg, 8, seed=1)
+    replay_eng, refs = _reference(trace, cfg, model, params, seed=0)
+
+    inj = FaultInjector(kill_replica=(0, 5))
+    clu = Cluster(
+        _factory(model, params), 2, heartbeat_ms=500.0,
+        budget=FailoverBudget(max_failovers=3),
+        injector=inj, probation_s=0.05, straggler_min_s=10.0,
+    )
+    try:
+        for rep in clu.replicas:
+            _warm(rep.eng, cfg)
+        reqs = _build(trace, cfg, seed=0)
+        clu.run(reqs, timeout_s=120.0)
+
+        assert inj.fired.get("kill_replica") == 1
+        assert isinstance(clu.replicas[0].error, ReplicaKilled)
+        assert clu.replicas[0].state == "dead"
+        assert not clu.replicas[0].thread_alive  # the thread genuinely died
+        assert clu.replica_deaths >= 1
+        assert clu.failovers >= 1
+        assert clu.exhausted == 0
+        n_failed = _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
+        assert n_failed >= 1  # the kill landed on live work
+
+        # a killed replica needs a rebuilt engine; it rejoins via probation
+        inj.kill_replica = None  # disarm before the fresh engine steps
+        with pytest.raises(RuntimeError):
+            clu.restart_replica(1)  # live replicas must not be rebuilt
+        clu.restart_replica(0)
+        assert clu.replicas[0].thread_alive
+        _drive_to_healthy(clu, 0)
+        assert clu.rejoins >= 1
+
+        # the restarted fleet serves again
+        more = _build(_trace(cfg, 2, seed=9), cfg, seed=50)
+        clu.run(more, timeout_s=120.0)
+        assert all(r.status == "ok" for r in more)
+    finally:
+        clu.close()
+
+
+# --------------------------------------------------------------------------- #
+# hang fault: heartbeat-miss detection
+# --------------------------------------------------------------------------- #
+def test_cluster_hang_heartbeat_miss_failover(llama):
+    cfg, model, params = llama
+    trace = _trace(cfg, 6, seed=2)
+    replay_eng, refs = _reference(trace, cfg, model, params, seed=0)
+
+    inj = FaultInjector(hang_replica=(0, 4), hang_s=2.0)
+    clu = Cluster(
+        _factory(model, params), 2, heartbeat_ms=500.0,
+        budget=FailoverBudget(max_failovers=3),
+        injector=inj, probation_s=0.05, straggler_min_s=10.0,
+    )
+    try:
+        for rep in clu.replicas:
+            _warm(rep.eng, cfg)
+        reqs = _build(trace, cfg, seed=0)
+        clu.run(reqs, timeout_s=120.0)
+
+        assert inj.fired.get("hang_replica") == 1
+        # no exception was raised: ONLY the silent heartbeat caught this
+        assert clu.heartbeat_misses >= 1
+        assert clu.replica_deaths >= 1
+        assert clu.failovers >= 1
+        assert clu.exhausted == 0
+        n_failed = _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
+        assert n_failed >= 1
+        # the hung thread survived; once the hang ends it drains and can
+        # walk probation back to healthy
+        assert clu.replicas[0].thread_alive
+        _drive_to_healthy(clu, 0)
+        assert clu.rejoins >= 1
+    finally:
+        clu.close()
+
+
+# --------------------------------------------------------------------------- #
+# slow fault: watchdog straggler detection
+# --------------------------------------------------------------------------- #
+def test_cluster_slow_replica_straggler_death(llama):
+    cfg, model, params = llama
+    trace = _trace(cfg, 6, seed=3)
+    replay_eng, refs = _reference(trace, cfg, model, params, seed=0)
+
+    # the slowdown happens INSIDE engine steps (the engine-level fault),
+    # so the watchdog times it; heartbeat_ms is huge so the ONLY death
+    # signal is the straggler flag above the absolute floor.  The window
+    # is armed AFTER warmup, relative to the step index warmup reached.
+    eng_inj = FaultInjector(slow_ms=400.0)
+
+    def make(rid: int) -> Engine:
+        eng = Engine(model, params, **ENG_KW)
+        if rid == 0:
+            eng.injector = eng_inj
+        return eng
+
+    clu = Cluster(
+        make, 2, heartbeat_ms=5000.0,
+        budget=FailoverBudget(max_failovers=3),
+        probation_s=0.05, straggler_min_s=0.05,
+    )
+    try:
+        for rep in clu.replicas:
+            _warm(rep.eng, cfg)
+        base = clu.replicas[0].eng._step_idx
+        eng_inj.slow_steps = (base + 3, base + 7)
+        reqs = _build(trace, cfg, seed=0)
+        clu.run(reqs, timeout_s=120.0)
+
+        assert eng_inj.fired.get("slow_step", 0) >= 1
+        assert clu.replicas[0].eng.straggler_flags >= 1
+        assert clu.heartbeat_misses == 0  # straggler path, not heartbeat
+        assert clu.replica_deaths >= 1
+        assert clu.exhausted == 0
+        _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
+    finally:
+        clu.close()
+
+
+# --------------------------------------------------------------------------- #
+# retry-budget exhaustion -> structured replica_lost rejection
+# --------------------------------------------------------------------------- #
+def test_cluster_budget_exhaustion_structured_rejection(llama):
+    cfg, model, params = llama
+    trace = _trace(cfg, 2, seed=4)
+    inj = FaultInjector(kill_replica=(0, 3))
+    clu = Cluster(
+        _factory(model, params), 1,
+        budget=FailoverBudget(max_failovers=0),
+        injector=inj, straggler_min_s=10.0,
+    )
+    try:
+        reqs = _build(trace, cfg, seed=0)
+        clu.run(reqs, timeout_s=120.0)
+        assert inj.fired.get("kill_replica") == 1
+        assert clu.exhausted >= 1
+        assert clu.failovers == 0  # zero budget: no re-enqueue happened
+        for r in reqs:
+            # nothing vanishes: every root lands terminal with a reason
+            assert r.status == "shed"
+            assert r.rejected is not None
+            assert r.rejected.reason == "replica_lost"
+            assert r.rejected.uid == r.uid
+    finally:
+        clu.close()
+
+
+# --------------------------------------------------------------------------- #
+# probation state machine (monitor driven manually)
+# --------------------------------------------------------------------------- #
+def test_cluster_probation_rejoin_state_machine(llama):
+    cfg, model, params = llama
+    clu = Cluster(
+        _factory(model, params), 1, heartbeat_ms=50.0,
+        cold_grace_s=0.05, probation_s=0.1, straggler_min_s=10.0,
+    )
+    try:
+        clu.start()
+        rep = clu.replicas[0]
+        deadline = time.monotonic() + 5.0
+        while rep.state == "healthy" and time.monotonic() < deadline:
+            # simulate a wedged device: the beat stops
+            rep.last_beat = time.monotonic() - 1.0
+            clu.check_health()
+        assert rep.state == "dead"
+        assert clu.heartbeat_misses >= 1
+        assert rep.state_cmd == "drain"
+
+        # the thread drains (nothing held) and beats while parked ->
+        # probation; a clean probation window -> healthy again
+        deadline = time.monotonic() + 5.0
+        while rep.state == "dead" and time.monotonic() < deadline:
+            clu.check_health()
+            time.sleep(0.01)
+        assert rep.state == "probation"
+        assert rep.drained
+        t_probation = time.monotonic()
+        _drive_to_healthy(clu, 0)
+        assert time.monotonic() - t_probation >= clu.probation_s * 0.5
+        assert clu.rejoins == 1
+        assert rep.state_cmd == "run"
+    finally:
+        clu.close()
+
+
+# --------------------------------------------------------------------------- #
+# cross-replica resume: every chunk-capable arch
+# --------------------------------------------------------------------------- #
+CHUNK_ARCHS = [
+    a for a in ARCH_IDS
+    if get_arch(a, reduced=True).family in ("dense", "moe")
+    and get_arch(a, reduced=True).sliding_window is None
+]
+
+
+@pytest.mark.parametrize("arch_id", CHUNK_ARCHS)
+def test_cross_replica_resume_bit_exact(arch_id):
+    """export_inflight() on replica A -> submit on replica B: the credited
+    prefix is bit-identical to the undisturbed stream, and the resumed
+    tail is bit-identical to any fresh engine serving that continuation —
+    for every arch the chunked-prefill (rematerialization) path supports."""
+    cfg = get_arch(arch_id, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    extras = modality_extras(cfg, rng)
+    steps = 8
+    kw = dict(n_slots=2, max_len=MAX_LEN, page_size=4, prefill_chunk=4,
+              decode_block=2)
+
+    ref_eng = Engine(model, params, **kw)
+    ref = ref_eng.run(
+        [Request(prompt=prompt.copy(), max_new_tokens=steps, extras=extras)]
+    )[0]
+    refs = list(ref.tokens)
+    assert len(refs) == steps
+
+    # replica A serves, then "dies": export carries the work out
+    eng_a = Engine(model, params, **kw)
+    r = eng_a.submit(
+        Request(prompt=prompt.copy(), max_new_tokens=steps, extras=extras)
+    )
+    guard = 0
+    while len(r.tokens) < 3 and guard < 64:
+        eng_a.step()
+        guard += 1
+    assert 0 < len(r.tokens) < steps, "export must happen mid-decode"
+    conts = eng_a.export_inflight()
+    assert len(conts) == 1 and eng_a.exported == 1
+    assert not eng_a.has_work
+    if eng_a.paged:
+        assert eng_a.pages_in_use == 0  # no orphaned pages after export
+
+    emitted = list(r.tokens)
+    assert emitted == refs[: len(emitted)], "credited prefix diverged"
+
+    # replica B resumes the continuation; the engine folds the tail back
+    # into the root request's stream
+    eng_b = Engine(model, params, **kw)
+    eng_b.submit(conts[0])
+    while eng_b.has_work:
+        eng_b.step()
+    assert r.status == "ok"
+    assert len(r.tokens) == steps
+    tail = list(r.tokens)[len(emitted):]
+
+    # any fresh engine serving the same continuation emits the same tail
+    replay = Request(
+        prompt=np.concatenate([prompt, np.asarray(emitted, np.int32)]),
+        max_new_tokens=steps - len(emitted), extras=extras,
+    )
+    eng_c = Engine(model, params, **kw)
+    eng_c.run([replay])
+    assert tail == list(replay.tokens), (
+        f"{arch_id}: resumed tail diverged from the continuation replay"
+    )

@@ -6,7 +6,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.runtime.fault_tolerance import RetryableStep, StepWatchdog
+from repro.runtime.fault_tolerance import RetryableStep, StepWatchdog, backoff_s
 
 
 # --------------------------------------------------------------------------- #
@@ -52,6 +52,67 @@ def test_retry_zero_budget_is_single_attempt():
     with pytest.raises(ValueError):
         r()
     assert r.total_retries == 1
+
+
+def test_retry_backoff_off_by_default_never_sleeps():
+    """``base_delay_s=0`` preserves the historical hot-retry semantics:
+    the injectable sleep is never invoked, the counters say so."""
+    naps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("flap")
+        return 42
+
+    r = RetryableStep(flaky, max_retries=3, sleep=naps.append)
+    assert r() == 42
+    assert naps == []
+    assert r.backoffs == 0 and r.total_backoff_s == 0.0
+    assert r.total_attempts == 3 and r.total_retries == 2
+
+
+def test_retry_backoff_capped_exponential_deterministic_jitter():
+    """Armed backoff sleeps the exact ``backoff_s`` schedule: exponential
+    from ``base_delay_s``, capped at ``max_delay_s``, jitter in [raw/2, raw]
+    hashed from (salt, attempt) — reproducible, no global RNG."""
+    naps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 4:
+            raise RuntimeError("flap")
+        return "up"
+
+    r = RetryableStep(
+        flaky, max_retries=4, base_delay_s=0.1, max_delay_s=0.4,
+        jitter_salt=7, sleep=naps.append,
+    )
+    assert r() == "up"
+    assert r.backoffs == 4 and r.total_attempts == 5
+    expected = [backoff_s(k, base_s=0.1, cap_s=0.4, salt=7) for k in range(4)]
+    assert naps == expected  # deterministic: the schedule replays exactly
+    for k, d in enumerate(naps):
+        raw = min(0.1 * 2.0 ** k, 0.4)
+        assert raw / 2 <= d <= raw <= 0.4
+    assert r.total_backoff_s == pytest.approx(sum(naps))
+    # different salts de-synchronize concurrent retriers
+    assert backoff_s(2, base_s=0.1, cap_s=0.4, salt=8) != expected[2]
+
+
+def test_retry_backoff_no_sleep_after_final_failure():
+    """The terminal failure propagates immediately — sleeping after the
+    last attempt would delay the restart loop for nothing."""
+    naps = []
+    r = RetryableStep(
+        lambda: (_ for _ in ()).throw(ValueError("x")),
+        max_retries=2, base_delay_s=0.05, sleep=naps.append,
+    )
+    with pytest.raises(ValueError):
+        r()
+    assert len(naps) == 2  # between attempts only
 
 
 # --------------------------------------------------------------------------- #

@@ -394,6 +394,52 @@ def test_engine_graceful_drain_on_stop():
         assert r.rejected.reason == "shutdown"
 
 
+def test_engine_graceful_drain_under_active_fault_injection():
+    """SIGINT mid-incident: a stop() drain lands while a nan_logits fault
+    is quarantining a request.  Every request must still reach a terminal
+    status (ok / error / shed-"shutdown"), nothing vanishes, and the page
+    pool holds zero orphaned pages at exit — quarantine frees its pages
+    even when the engine is simultaneously draining."""
+    cfg = get_arch("llama3.2-1b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(35)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32),
+                max_new_tokens=8)
+        for _ in range(4)
+    ]
+    inj = FaultInjector(nan_logits=(0, 4))  # uid 0 poisoned mid-decode
+    eng = Engine(model, params, n_slots=2, max_len=32, page_size=4,
+                 decode_block=2, injector=inj)
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 3  # flip while uid 0/1 decode, 2/3 still queued
+
+    finished = eng.run(reqs, stop=stop)
+    assert not eng.has_work
+    assert inj.fired.get("nan_logits") == 1
+    assert eng.quarantined == 1
+    assert len(finished) == 4  # zero silently lost
+    by_status: dict = {}
+    for r in finished:
+        by_status.setdefault(r.status, []).append(r)
+    assert set(by_status) <= {"ok", "error", "shed"}
+    assert len(by_status.get("error", [])) == 1
+    assert "non-finite" in by_status["error"][0].error
+    assert len(by_status.get("shed", [])) >= 1  # the drain genuinely shed
+    for r in by_status.get("shed", []):
+        assert r.rejected is not None and r.rejected.reason == "shutdown"
+    for r in by_status.get("ok", []):
+        assert len(r.tokens) == 8  # in-flight work finished, not truncated
+    # allocator invariants at exit: no orphaned pages, full free list
+    assert eng.pages_in_use == 0
+    assert eng.page_pool.n_free == eng.kv_pages
+    assert eng.scheduler.allocator.n_active == 0
+
+
 # --------------------------------------------------------------------------- #
 # fault injection + quarantine
 # --------------------------------------------------------------------------- #
