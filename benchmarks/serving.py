@@ -1087,6 +1087,7 @@ def run_failover_trace(
     kill floor (``straggler_min_s=2.0``) — slow-device detection has its
     own unit tests; this trace must not false-kill under CI load.
     """
+    from repro.analysis import sanitize
     from repro.data.synthetic import modality_extras
     from repro.runtime.fault_tolerance import FaultInjector
     from repro.serving import Cluster, Engine, Request, SamplingParams
@@ -1252,6 +1253,10 @@ def run_failover_trace(
             done = clu.run(reqs, arrivals=arrivals, timeout_s=120.0)
             dt = time.perf_counter() - t0
             clu.close()
+            if sanitize.enabled():
+                # REPRO_SANITIZE=1: any guarded-attribute access that raced
+                # during the trace was recorded, not raised; fail loud here.
+                sanitize.check()
             fired = injector.fired.get("kill_replica", 0) if injector else 0
             row = summarize(
                 label, done, reqs, [r.eng for r in clu.replicas], dt,

@@ -1,0 +1,40 @@
+"""Repo-invariant static analysis for the RSI serving stack.
+
+Four AST-driven passes turn the repo's hardest-won debugging lessons into
+machine-checked contracts:
+
+* ``donation-safety`` — a binding passed at a ``donate_argnums`` position
+  of a jitted wrapper is INVALID after the call; any read without
+  rebinding from the result is flagged (the engine donates the KV pool
+  through five programs — a stale read is silent corruption).
+* ``jit-purity`` — host side effects inside functions reachable from
+  ``jax.jit`` / ``lax.scan`` / ``pallas_call`` bodies (``print``,
+  ``time.*``, ``.item()``, ``np.asarray`` on tracers, mutation of
+  captured module state, ``threading``) run at TRACE time, not per step —
+  at best a perf lie, at worst nondeterminism.
+* ``lock-discipline`` — attributes annotated ``# guarded by: <lockname>``
+  must only be touched under ``with <lockname>:``, from a helper whose
+  every intra-module call site holds the lock, or from a
+  ``_locked``-suffixed helper (the documented caller-holds-it convention).
+* ``pallas-contract`` — every ``pallas_call``'s per-program VMEM estimate
+  (BlockSpec block shapes x dtype + scratch) must fit the
+  ``fused_vmem_bytes`` budget model's limit, and grid / index_map /
+  kernel-signature arities must agree.
+
+Run as ``python -m repro.analysis [--strict] [--json PATH]
+[--baseline analysis/baseline.json] [paths...]``.  Suppress a single
+finding with ``# repro-lint: ignore[pass-id]`` on the flagged line (plus a
+one-line justification).  The companion runtime sanitizer
+(:mod:`repro.analysis.sanitize`, armed via ``REPRO_SANITIZE=1``) wraps
+``guarded by:``-annotated attributes in debug descriptors asserting the
+owning lock is held at access time — the dynamic cross-check of the
+lock-discipline pass under the real cluster/failover tests.
+
+The package is deliberately stdlib-only (``ast`` + ``re``): it must run in
+CI before any heavyweight import and must be importable from
+``serving/cluster.py`` (sanitizer hook) without cycles.
+"""
+
+from repro.analysis.core import Diagnostic, SourceFile, run_analysis
+
+__all__ = ["Diagnostic", "SourceFile", "run_analysis"]

@@ -1,0 +1,97 @@
+"""CLI entry point: ``python -m repro.analysis [--strict] [paths...]``.
+
+Exit codes: 0 clean, 1 findings over baseline in ``--strict``, 2 internal
+error (unparsable file or a crashed pass — never silently "clean").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.core import (
+    EXIT_CLEAN,
+    EXIT_FINDINGS,
+    EXIT_INTERNAL,
+    counts_by_pass,
+    diff_against_baseline,
+    load_baseline,
+    run_analysis,
+)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-invariant static analysis (donation-safety, "
+        "jit-purity, lock-discipline, pallas-contract).",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding over the baseline")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a machine-readable report (use '-' for stdout)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="accepted per-pass finding counts to diff against")
+    ap.add_argument("--pass", dest="passes", action="append", default=None,
+                    metavar="PASS_ID", help="run only the named pass(es)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    try:
+        diags, errors, n_files = run_analysis(paths, pass_ids=args.passes)
+    except Exception as e:  # driver bug: still honor the exit contract
+        print(f"internal error: {type(e).__name__}: {e}", file=sys.stderr)
+        return EXIT_INTERNAL
+
+    baseline = {}
+    if args.baseline:
+        try:
+            baseline = load_baseline(args.baseline)
+        except (OSError, ValueError) as e:
+            print(f"internal error: bad baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return EXIT_INTERNAL
+
+    for d in diags:
+        print(d.format())
+    for err in errors:
+        print(f"INTERNAL: {err}", file=sys.stderr)
+
+    counts = counts_by_pass(diags)
+    over = diff_against_baseline(diags, baseline)
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items())) or "clean"
+    print(f"{n_files} files, {len(diags)} finding(s): {summary}")
+    if baseline and over:
+        print("over baseline: "
+              + ", ".join(f"{k}+{v}" for k, v in sorted(over.items())))
+
+    if args.json:
+        report = {
+            "files": n_files,
+            "counts": counts,
+            "over_baseline": over,
+            "internal_errors": errors,
+            "diagnostics": [d.to_json() for d in diags],
+        }
+        text = json.dumps(report, indent=2, sort_keys=True)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+
+    if errors:
+        return EXIT_INTERNAL
+    if args.strict:
+        failing = over if baseline else counts
+        if failing:
+            return EXIT_FINDINGS
+    return EXIT_CLEAN
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,181 @@
+"""Driver core for the static-analysis suite.
+
+Owns the pieces every pass shares: parsed source files with suppression
+comments, the :class:`Diagnostic` record, file collection, the pass
+registry, baseline diffing, and the exit-code contract
+(0 clean / 1 findings / 2 internal error).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Diagnostic",
+    "SourceFile",
+    "collect_files",
+    "run_analysis",
+    "load_baseline",
+    "diff_against_baseline",
+    "EXIT_CLEAN",
+    "EXIT_FINDINGS",
+    "EXIT_INTERNAL",
+]
+
+EXIT_CLEAN = 0
+EXIT_FINDINGS = 1
+EXIT_INTERNAL = 2
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*ignore\[([a-z\-*,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding: ``path:line: [pass-id] message``."""
+
+    pass_id: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_id}] {self.message}"
+
+    def to_json(self) -> dict:
+        return {
+            "pass": self.pass_id,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+        }
+
+
+class SourceFile:
+    """A parsed module plus its per-line suppression table.
+
+    ``# repro-lint: ignore[pass-id]`` (comma-separated ids, or ``*``) on a
+    line suppresses findings anchored to that line.
+    """
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self.suppressions: Dict[int, set] = {}
+        for lineno, line in enumerate(self.lines, 1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+                self.suppressions[lineno] = ids
+
+    @classmethod
+    def read(cls, path: str) -> "SourceFile":
+        with open(path, "r", encoding="utf-8") as f:
+            return cls(path, f.read())
+
+    def suppressed(self, pass_id: str, line: int) -> bool:
+        ids = self.suppressions.get(line)
+        return ids is not None and (pass_id in ids or "*" in ids)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+def collect_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted list of ``.py`` files."""
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs
+                    if not d.startswith(".") and d != "__pycache__"
+                )
+                for name in sorted(names):
+                    if name.endswith(".py"):
+                        out.append(os.path.join(root, name))
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def _registry():
+    # imported lazily so a syntax error in one pass module surfaces as an
+    # internal error (exit 2), not an import-time crash of the package
+    from repro.analysis import donation, locks, pallas_contract, purity
+
+    return [donation, purity, locks, pallas_contract]
+
+
+def run_analysis(
+    paths: Sequence[str],
+    pass_ids: Optional[Iterable[str]] = None,
+) -> Tuple[List[Diagnostic], List[str], int]:
+    """Run every pass over every file.
+
+    Returns ``(diagnostics, internal_errors, n_files)``.  A file that
+    fails to parse or a pass that raises is an INTERNAL error — reported
+    and mapped to exit code 2, never silently swallowed as "clean".
+    """
+    modules = _registry()
+    if pass_ids is not None:
+        wanted = set(pass_ids)
+        modules = [m for m in modules if m.PASS_ID in wanted]
+    files = collect_files(paths)
+    diags: List[Diagnostic] = []
+    errors: List[str] = []
+    for path in files:
+        try:
+            src = SourceFile.read(path)
+        except (OSError, SyntaxError, ValueError) as e:
+            errors.append(f"{path}: parse failed: {e}")
+            continue
+        for mod in modules:
+            try:
+                found = mod.check(src)
+            except Exception as e:  # a buggy pass must not masquerade as clean
+                errors.append(
+                    f"{path}: pass {mod.PASS_ID} crashed: {type(e).__name__}: {e}"
+                )
+                continue
+            diags.extend(
+                d for d in found if not src.suppressed(d.pass_id, d.line)
+            )
+    diags.sort(key=lambda d: (d.path, d.line, d.pass_id))
+    return diags, errors, len(files)
+
+
+def counts_by_pass(diags: Sequence[Diagnostic]) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for d in diags:
+        out[d.pass_id] = out.get(d.pass_id, 0) + 1
+    return out
+
+
+def load_baseline(path: str) -> Dict[str, int]:
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    counts = data.get("counts", data)
+    return {str(k): int(v) for k, v in counts.items()}
+
+
+def diff_against_baseline(
+    diags: Sequence[Diagnostic], baseline: Dict[str, int]
+) -> Dict[str, int]:
+    """Per-pass finding count MINUS the accepted baseline count (floored
+    at 0).  Any positive entry is a regression the strict gate fails on."""
+    current = counts_by_pass(diags)
+    out: Dict[str, int] = {}
+    for pass_id, n in current.items():
+        extra = n - baseline.get(pass_id, 0)
+        if extra > 0:
+            out[pass_id] = extra
+    return out

@@ -1,0 +1,303 @@
+"""donation-safety: reads of donated bindings after a donating call.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA alias the donated buffers in
+place — the caller's binding is INVALID the moment the call runs.  The
+engine leans on this everywhere (the KV pool is donated through the fused
+block, the chunk-prefill program, and the COW fork), so the contract is:
+**every donated argument binding must be rebound from the call's result
+(or never touched again).**
+
+The pass resolves three donor shapes seen in this repo:
+
+* direct:      ``f = jax.jit(fn, donate_argnums=(0,))``
+* attribute:   ``self._chunk_jit = jax.jit(..., donate_argnums=(1,))``
+* factory:     a function that *returns* a locally-built donating jit
+               (``Engine._fused_fn``); assigning its result
+               (``fused = self._fused_fn(greedy)``) makes the target a
+               donor with the same indices.
+
+At each donor call site, for every donated positional argument that is a
+plain name or attribute (fresh temporaries like ``jnp.asarray(x)`` cannot
+be re-read and are skipped):
+
+* if the call statement itself rebinds the binding from the result
+  (``x, self.cache = f(params, self.cache, ...)``), the site is safe;
+* otherwise any later *read* of the binding in the same function — before
+  a rebinding statement — is flagged, and a donating call inside a loop
+  with no rebind at the call is flagged too (the next iteration reads the
+  donated value).
+
+Scope: per-function, straight-line statement order (the same
+approximation the engine's code actually relies on).  Aliases and
+cross-method reads are out of scope — documented, not detected.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Diagnostic, SourceFile
+
+PASS_ID = "donation-safety"
+
+__all__ = ["PASS_ID", "check"]
+
+
+def _is_jit_func(node: ast.expr) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    return False
+
+
+def _donate_indices(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    if not isinstance(call, ast.Call) or not _is_jit_func(call.func):
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, (ast.Tuple, ast.List)):
+                idxs = tuple(
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                )
+                return idxs or None
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            return None
+    return None
+
+
+def _binding_key(node: ast.expr) -> Optional[str]:
+    """Stable key for a rebindable binding: a bare name or a dotted
+    attribute chain of names (``self.cache``).  Anything else (calls,
+    subscripts, constants) is a fresh temporary — not trackable, and not
+    re-readable, so not a donation hazard."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _binding_key(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _assigned_keys(stmt: ast.stmt) -> List[str]:
+    """Binding keys stored by an assignment-like statement."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    out: List[str] = []
+    for t in targets:
+        for node in ast.walk(t):
+            key = _binding_key(node)
+            if key is not None and isinstance(
+                getattr(node, "ctx", None), ast.Store
+            ):
+                out.append(key)
+    return out
+
+
+def _reads_in(node: ast.AST, key: str) -> List[int]:
+    """Line numbers where ``key`` is read (Load ctx) inside ``node``."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)) and isinstance(
+            n.ctx, ast.Load
+        ):
+            if _binding_key(n) == key:
+                out.append(n.lineno)
+    return out
+
+
+class _DonorTable:
+    """Donor names/attrs and their donated positional indices."""
+
+    def __init__(self):
+        self.by_name: Dict[str, Tuple[int, ...]] = {}
+        self.by_attr: Dict[str, Tuple[int, ...]] = {}
+        self.factories: Dict[str, Tuple[int, ...]] = {}
+
+    def lookup(self, func: ast.expr) -> Optional[Tuple[int, ...]]:
+        if isinstance(func, ast.Name):
+            return self.by_name.get(func.id)
+        if isinstance(func, ast.Attribute):
+            return self.by_attr.get(func.attr)
+        return None
+
+    def factory_of(self, func: ast.expr) -> Optional[Tuple[int, ...]]:
+        if isinstance(func, ast.Name):
+            return self.factories.get(func.id)
+        if isinstance(func, ast.Attribute):
+            return self.factories.get(func.attr)
+        return None
+
+
+def _collect_donors(tree: ast.Module) -> _DonorTable:
+    table = _DonorTable()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            idxs = _donate_indices(node.value)
+            if idxs is None:
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    table.by_name[t.id] = idxs
+                elif isinstance(t, ast.Attribute):
+                    table.by_attr[t.attr] = idxs
+    # factories: a function whose return value is a locally-assigned donor
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local: Dict[str, Tuple[int, ...]] = {}
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign) and isinstance(
+                    sub.value, ast.Call
+                ):
+                    idxs = _donate_indices(sub.value)
+                    if idxs is not None:
+                        for t in sub.targets:
+                            if isinstance(t, ast.Name):
+                                local[t.id] = idxs
+            for sub in ast.walk(node):
+                if (
+                    isinstance(sub, ast.Return)
+                    and isinstance(sub.value, ast.Name)
+                    and sub.value.id in local
+                ):
+                    table.factories[node.name] = local[sub.value.id]
+    return table
+
+
+def _find_donor_call(
+    stmt: ast.stmt, table: _DonorTable, local: Dict[str, Tuple[int, ...]]
+) -> Optional[Tuple[ast.Call, Tuple[int, ...]]]:
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Call):
+            idxs = table.lookup(node.func)
+            if idxs is None and isinstance(node.func, ast.Name):
+                idxs = local.get(node.func.id)
+            if idxs is not None:
+                return node, idxs
+    return None
+
+
+def check(src: SourceFile) -> List[Diagnostic]:
+    table = _collect_donors(src.tree)
+    diags: List[Diagnostic] = []
+    for fn in ast.walk(src.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # donors bound locally in this function (incl. factory results)
+        local: Dict[str, Tuple[int, ...]] = {}
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call):
+                idxs = _donate_indices(sub.value)
+                if idxs is None:
+                    idxs = table.factory_of(sub.value.func)
+                if idxs is not None:
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            local[t.id] = idxs
+        diags.extend(_check_function(src, fn, table, local))
+    return diags
+
+
+def _enclosing_loops(fn: ast.AST, stmt: ast.stmt) -> bool:
+    """Is ``stmt`` (by line range) inside a loop of ``fn``?"""
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            if node is stmt:
+                continue
+            if (
+                node.lineno <= stmt.lineno
+                and (node.end_lineno or node.lineno) >= (stmt.end_lineno or stmt.lineno)
+            ):
+                return True
+    return False
+
+
+def _check_function(
+    src: SourceFile,
+    fn: ast.AST,
+    table: _DonorTable,
+    local: Dict[str, Tuple[int, ...]],
+) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    stmts = [n for n in ast.walk(fn) if isinstance(n, ast.stmt)]
+    stmts.sort(key=lambda s: (s.lineno, -(s.end_lineno or s.lineno)))
+    for stmt in stmts:
+        if not isinstance(
+            stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr, ast.Return)
+        ):
+            continue
+        found = _find_donor_call(stmt, table, local)
+        if found is None:
+            continue
+        call, idxs = found
+        rebound = set(_assigned_keys(stmt))
+        for i in idxs:
+            if i >= len(call.args):
+                continue
+            key = _binding_key(call.args[i])
+            if key is None:
+                continue  # fresh temporary (call/subscript/constant)
+            if key in rebound:
+                continue  # rebinding at the call statement: the contract
+            call_end = stmt.end_lineno or stmt.lineno
+            # 1) later reads before any rebinding (line-ordered scan)
+            rebind_line = None
+            for later in stmts:
+                if later.lineno <= call_end or later is stmt:
+                    continue
+                if key in _assigned_keys(later) and not _reads_in(
+                    later.value if isinstance(later, ast.Assign) else later, key
+                ):
+                    rebind_line = later.lineno
+                    break
+            for later in stmts:
+                if later.lineno <= call_end:
+                    continue
+                if rebind_line is not None and later.lineno >= rebind_line:
+                    break
+                reads = [ln for ln in _reads_in(later, key) if ln > call_end]
+                if reads:
+                    diags.append(
+                        Diagnostic(
+                            PASS_ID,
+                            src.path,
+                            reads[0],
+                            f"`{key}` read after being donated at line "
+                            f"{call.lineno} (donate_argnums index {i}); "
+                            f"rebind it from the call result",
+                        )
+                    )
+                    break
+            # 2) donation inside a loop with no rebind at the call: the
+            #    next iteration re-reads the donated binding
+            if _enclosing_loops(fn, stmt):
+                diags.append(
+                    Diagnostic(
+                        PASS_ID,
+                        src.path,
+                        call.lineno,
+                        f"`{key}` donated (index {i}) inside a loop without "
+                        f"rebinding at the call — the next iteration reads "
+                        f"a donated buffer",
+                    )
+                )
+    # dedupe (a read can be reached from several stmt walks)
+    seen = set()
+    out = []
+    for d in diags:
+        k = (d.line, d.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(d)
+    return out

@@ -1,0 +1,270 @@
+"""lock-discipline: guarded-attribute access must hold the owning lock.
+
+Shared state is annotated at its definition site::
+
+    self.inbox = []          # guarded by: inbox_lock
+    _COUNTS = Counter()      # guarded by: _COUNTS_LOCK
+
+The pass then checks every access (read or write) of an annotated
+attribute anywhere in the module.  An access is OK when it is:
+
+* lexically inside ``with <lockname>:`` (matched by the lock's *leaf*
+  name: ``with self._lock:``, ``with rep.inbox_lock:``, ``with
+  _COUNTS_LOCK:`` all match their respective annotations — same-named
+  locks on different objects are treated as may-alias, which is exactly
+  the convention this repo follows);
+* inside ``__init__`` (single-threaded construction) or a
+  ``*_locked``-suffixed helper (the documented caller-holds-it
+  convention);
+* inside a function *dominated* by the lock: every intra-module call
+  site (bare ``name(...)`` or ``self.name(...)``) is itself under the
+  lock — lexically, via the caller's own domination, or from an exempt
+  function.  This is a fixpoint over the intra-module call graph, so
+  ``Cluster._fail_over`` (only ever called with ``self._lock`` held)
+  passes without renaming;
+* at module level (import-time initialization).
+
+Everything else is flagged with the attribute, the missing lock, and the
+enclosing function.  The annotation parser (:func:`parse_guards`) is
+shared with :mod:`repro.analysis.sanitize`, which arms the same
+annotations as runtime descriptors under ``REPRO_SANITIZE=1``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Diagnostic, SourceFile
+
+PASS_ID = "lock-discipline"
+
+__all__ = ["PASS_ID", "check", "parse_guards", "GUARD_RE"]
+
+GUARD_RE = re.compile(r"#\s*guarded by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_ATTR_DEF_RE = re.compile(r"^\s*self\.([A-Za-z_][A-Za-z0-9_]*)\s*[:=\[]")
+_FIELD_DEF_RE = re.compile(r"^\s+([A-Za-z_][A-Za-z0-9_]*)\s*[:=]")
+_GLOBAL_DEF_RE = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*)\s*[:=]")
+
+
+def parse_guards(lines: Sequence[str]) -> Tuple[Dict[str, str], Dict[str, str]]:
+    """Extract ``# guarded by:`` annotations from source lines.
+
+    Returns ``(attr_guards, global_guards)``: attribute-name -> lock-name
+    for ``self.X = ...`` definition lines and indented class-body /
+    dataclass field lines (``fired: Dict[...] = field(...)``), and
+    global-name -> lock-name for column-0 ``X = ...`` lines.  Shared with
+    the runtime sanitizer, which calls this on
+    ``inspect.getsource(cls)`` lines.
+    """
+    attr_guards: Dict[str, str] = {}
+    global_guards: Dict[str, str] = {}
+    for line in lines:
+        m = GUARD_RE.search(line)
+        if not m:
+            continue
+        lock = m.group(1)
+        am = _ATTR_DEF_RE.match(line)
+        if am:
+            attr_guards[am.group(1)] = lock
+            continue
+        gm = _GLOBAL_DEF_RE.match(line)
+        if gm:
+            global_guards[gm.group(1)] = lock
+            continue
+        fm = _FIELD_DEF_RE.match(line)
+        if fm:
+            attr_guards[fm.group(1)] = lock
+    return attr_guards, global_guards
+
+
+def _leaf(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _with_lock_ranges(fn: ast.AST) -> List[Tuple[str, int, int]]:
+    """(lockname, first_line, last_line) for every ``with`` in ``fn``
+    whose context expression's leaf name looks like a lock."""
+    out: List[Tuple[str, int, int]] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                name = _leaf(item.context_expr)
+                if name is not None:
+                    out.append(
+                        (name, node.lineno, node.end_lineno or node.lineno)
+                    )
+    return out
+
+
+def _is_exempt(fn: ast.AST) -> bool:
+    name = getattr(fn, "name", "")
+    return name == "__init__" or name.endswith("_locked")
+
+
+class _FnInfo:
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        self.name = fn.name
+        self.ranges = _with_lock_ranges(fn)
+        self.exempt = _is_exempt(fn)
+        # locks held for my entire body as established by my callers
+        # (fixpoint; optimistic start, shrinks monotonically)
+        self.entry_held: Optional[Set[str]] = None
+
+    def lexical_locks(self, line: int) -> Set[str]:
+        return {
+            name for name, lo, hi in self.ranges if lo <= line <= hi
+        }
+
+
+def _functions(tree: ast.Module) -> List[_FnInfo]:
+    return [
+        _FnInfo(n)
+        for n in ast.walk(tree)
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    ]
+
+
+def _innermost_fn(fns: List[_FnInfo], line: int) -> Optional[_FnInfo]:
+    best: Optional[_FnInfo] = None
+    best_span = None
+    for info in fns:
+        lo = info.fn.lineno
+        hi = info.fn.end_lineno or lo
+        if lo <= line <= hi:
+            span = hi - lo
+            if best_span is None or span < best_span:
+                best, best_span = info, span
+    return best
+
+
+def _call_sites(
+    tree: ast.Module, fns: List[_FnInfo]
+) -> Dict[str, List[Tuple[Optional[_FnInfo], int]]]:
+    """fn-name -> [(caller_info_or_None_for_module_level, call_line)]."""
+    names = {f.name for f in fns}
+    sites: Dict[str, List[Tuple[Optional[_FnInfo], int]]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        callee: Optional[str] = None
+        if isinstance(f, ast.Name) and f.id in names:
+            callee = f.id
+        elif (
+            isinstance(f, ast.Attribute)
+            and isinstance(f.value, ast.Name)
+            and f.value.id == "self"
+            and f.attr in names
+        ):
+            callee = f.attr
+        if callee is None:
+            continue
+        caller = _innermost_fn(fns, node.lineno)
+        if caller is not None and caller.name == callee:
+            continue  # recursion: a self-call can't establish the lock
+        sites.setdefault(callee, []).append((caller, node.lineno))
+    return sites
+
+
+def _solve_domination(
+    fns: List[_FnInfo],
+    sites: Dict[str, List[Tuple[Optional[_FnInfo], int]]],
+    all_locks: Set[str],
+) -> None:
+    """Fixpoint: entry_held[F] = ∩ over call sites of locks provably held
+    at the site.  Functions with no intra-module call sites are entry
+    points (threads, tests, CLI) — nothing is held on entry."""
+    by_name: Dict[str, List[_FnInfo]] = {}
+    for f in fns:
+        by_name.setdefault(f.name, []).append(f)
+    for f in fns:
+        f.entry_held = set(all_locks) if sites.get(f.name) else set()
+    changed = True
+    while changed:
+        changed = False
+        for f in fns:
+            site_list = sites.get(f.name)
+            if not site_list:
+                continue
+            held = set(all_locks)
+            for caller, line in site_list:
+                if caller is None:
+                    here: Set[str] = set()  # module-level call
+                elif caller.exempt:
+                    here = set(all_locks)
+                else:
+                    here = caller.lexical_locks(line) | (
+                        caller.entry_held or set()
+                    )
+                held &= here
+                if not held:
+                    break
+            if held != f.entry_held:
+                f.entry_held = held
+                changed = True
+
+
+def check(src: SourceFile) -> List[Diagnostic]:
+    attr_guards, global_guards = parse_guards(src.lines)
+    if not attr_guards and not global_guards:
+        return []
+    fns = _functions(src.tree)
+    sites = _call_sites(src.tree, fns)
+    all_locks = set(attr_guards.values()) | set(global_guards.values())
+    _solve_domination(fns, sites, all_locks)
+
+    diags: List[Diagnostic] = []
+
+    def flag(line: int, what: str, lock: str, where: str) -> None:
+        diags.append(
+            Diagnostic(
+                PASS_ID,
+                src.path,
+                line,
+                f"`{what}` accessed without holding `{lock}` "
+                f"(in `{where}`) — wrap in `with {lock}:` or move into a "
+                f"`_locked` helper",
+            )
+        )
+
+    for node in ast.walk(src.tree):
+        name: Optional[str] = None
+        lock: Optional[str] = None
+        if isinstance(node, ast.Attribute) and node.attr in attr_guards:
+            name, lock = node.attr, attr_guards[node.attr]
+            # the lock object itself (`with x.inbox_lock:`) is not data
+            if name == lock:
+                continue
+        elif isinstance(node, ast.Name) and node.id in global_guards:
+            name, lock = node.id, global_guards[node.id]
+        else:
+            continue
+        fn = _innermost_fn(fns, node.lineno)
+        if fn is None:
+            continue  # module level: import-time init
+        if fn.exempt:
+            continue
+        if lock in fn.lexical_locks(node.lineno):
+            continue
+        if lock in (fn.entry_held or set()):
+            continue
+        what = f"self.{name}" if isinstance(node, ast.Attribute) else name
+        flag(node.lineno, what, lock, fn.name)
+
+    # dedupe per (line, message): AugAssign targets appear once anyway,
+    # but `x.attr` inside a single line can be walked via several parents
+    seen = set()
+    out = []
+    for d in diags:
+        k = (d.line, d.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(d)
+    return out

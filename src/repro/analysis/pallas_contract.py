@@ -1,0 +1,469 @@
+"""pallas-contract: static VMEM estimate + grid/index_map/kernel arity.
+
+For every ``pl.pallas_call(...)`` the pass checks two contracts:
+
+**Arity.**  ``len(grid)`` index axes must match every BlockSpec
+``index_map``'s parameter count, and the kernel's positional parameter
+count must equal ``n_in_specs + n_out_specs + n_scratch`` (each ``+1``
+per scalar-prefetch operand when the call uses
+``pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=...)``).  A
+``functools.partial(kernel, kw=...)`` wrapper is unwrapped and its
+keyword-bound names excluded from the positional count.
+
+**VMEM.**  Per-program bytes = Σ over in/out BlockSpecs of
+``prod(block_shape) * itemsize`` (``None`` dims squeeze to 1; itemsize
+defaults to 4 — fp32-conservative) plus scratch ``pltpu.VMEM(shape,
+dtype)`` allocations at their declared dtype.  The total must fit
+``DEFAULT_VMEM_LIMIT`` — the same 14 MiB window the runtime
+``fused_vmem_bytes`` budget models.
+
+Block dims are integers only after resolution, done per enclosing
+function with a shrink-only abstract interpretation:
+
+* literal ints and module-level integer constants;
+* keyword defaults (``def f(x, bq=128)`` — 128 bounds ``bq``);
+* ``b = min(x, y)`` — the min of the *resolvable* operands is a valid
+  upper bound even when the others are dynamic shapes;
+* ``while X % b: b //= 2`` — shrink-only, keeps any existing bound;
+* a module-level ``VMEM_ANALYSIS_BOUNDS = {"name": bound}`` dict for
+  dims that are genuinely dynamic (head dims, page sizes): the kernel
+  author's declared worst case, checked here so growing a model config
+  past it forces a conscious edit.
+
+A dim that still cannot be bounded is itself a finding — unless the
+enclosing function performs its own runtime budget check (calls
+``_check_fits`` / ``fits_fused``), which is the dynamic version of this
+gate and takes precedence.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Diagnostic, SourceFile
+
+PASS_ID = "pallas-contract"
+
+__all__ = ["PASS_ID", "check", "DEFAULT_VMEM_LIMIT"]
+
+# mirrors kernels/lowrank_matmul.DEFAULT_VMEM_LIMIT (the analysis package
+# is stdlib-only and must not import kernel modules)
+DEFAULT_VMEM_LIMIT = 14 * 2**20
+
+_RUNTIME_CHECKS = {"_check_fits", "fits_fused"}
+
+_ITEMSIZE = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+    "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+_DEFAULT_ITEMSIZE = 4
+
+
+def _dotted_leaf(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _Env:
+    """Upper bounds for integer-valued names in one function scope."""
+
+    def __init__(self, bounds: Dict[str, int]):
+        self.bounds = dict(bounds)
+
+    def resolve(self, node: ast.expr) -> Optional[int]:
+        if isinstance(node, ast.Constant):
+            if node.value is None:
+                return 1  # squeezed BlockSpec dim
+            if isinstance(node.value, int) and not isinstance(node.value, bool):
+                return node.value
+            return None
+        if isinstance(node, ast.Name):
+            return self.bounds.get(node.id)
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            v = self.resolve(node.operand)
+            return None if v is None else -v
+        if isinstance(node, ast.BinOp):
+            l, r = self.resolve(node.left), self.resolve(node.right)
+            if l is None or r is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return l + r
+                if isinstance(node.op, ast.Sub):
+                    return l - r
+                if isinstance(node.op, ast.Mult):
+                    return l * r
+                if isinstance(node.op, ast.FloorDiv):
+                    return l // r if r else None
+                if isinstance(node.op, ast.Mod):
+                    return l % r if r else None
+                if isinstance(node.op, ast.Pow):
+                    return l ** r if 0 <= r < 64 else None
+            except (OverflowError, ZeroDivisionError):
+                return None
+            return None
+        if isinstance(node, ast.Call):
+            name = _dotted_leaf(node.func)
+            vals = [self.resolve(a) for a in node.args]
+            if name == "min":
+                known = [v for v in vals if v is not None]
+                # min of the resolvable operands is a sound upper bound
+                return min(known) if known else None
+            if name == "max":
+                if vals and all(v is not None for v in vals):
+                    return max(vals)  # type: ignore[arg-type]
+                return None
+        return None
+
+
+def _module_bounds(tree: ast.Module) -> Dict[str, int]:
+    """Integer module constants + the VMEM_ANALYSIS_BOUNDS declaration."""
+    env = _Env({})
+    out: Dict[str, int] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+            if not isinstance(t, ast.Name):
+                continue
+            if t.id == "VMEM_ANALYSIS_BOUNDS" and isinstance(node.value, ast.Dict):
+                for k, v in zip(node.value.keys, node.value.values):
+                    if (
+                        isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)
+                    ):
+                        bound = env.resolve(v)
+                        if bound is not None:
+                            out[k.value] = bound
+                continue
+            env.bounds.update(out)
+            val = env.resolve(node.value)
+            if val is not None:
+                out[t.id] = val
+    return out
+
+
+def _function_env(fn: ast.AST, module_bounds: Dict[str, int],
+                  upto_line: int) -> _Env:
+    env = _Env(module_bounds)
+    args = fn.args
+    defaults = args.defaults
+    if defaults:
+        for param, default in zip(args.args[-len(defaults):], defaults):
+            v = env.resolve(default)
+            if v is not None:
+                env.bounds.setdefault(param.arg, v)
+    for param, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            v = env.resolve(default)
+            if v is not None:
+                env.bounds.setdefault(param.arg, v)
+    # straight-line abstract interpretation of assignments before the call
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.lineno < upto_line:
+            if len(node.targets) != 1:
+                continue
+            t = node.targets[0]
+            if isinstance(t, ast.Name):
+                v = env.resolve(node.value)
+                if v is not None:
+                    env.bounds[t.id] = v
+            elif isinstance(t, (ast.Tuple, ast.List)) and isinstance(
+                node.value, (ast.Tuple, ast.List)
+            ) and len(t.elts) == len(node.value.elts):
+                # `bm_, bn_ = min(bm, M), min(bn, N)` — zip-resolve
+                for sub_t, sub_v in zip(t.elts, node.value.elts):
+                    if isinstance(sub_t, ast.Name):
+                        v = env.resolve(sub_v)
+                        if v is not None:
+                            env.bounds[sub_t.id] = v
+        # `while X % b: b //= 2` only shrinks b — existing bound stays valid
+    return env
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_name_assign(fn: ast.AST, name: str,
+                         upto_line: int) -> Optional[ast.expr]:
+    """Most recent `name = <expr>` in ``fn`` before ``upto_line``."""
+    best: Optional[ast.expr] = None
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Assign)
+            and node.lineno <= upto_line
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == name
+        ):
+            best = node.value
+    return best
+
+
+def _spec_list(node: Optional[ast.expr]) -> Optional[List[ast.expr]]:
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    return [node]  # single BlockSpec out_specs
+
+
+def _block_dims(spec: ast.expr) -> Optional[List[ast.expr]]:
+    """BlockSpec((d0, d1, ...), index_map) -> the dim expressions."""
+    if not isinstance(spec, ast.Call):
+        return None
+    if _dotted_leaf(spec.func) != "BlockSpec":
+        return None
+    if not spec.args:
+        return None
+    shape = spec.args[0]
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return list(shape.elts)
+    return None
+
+
+def _index_map(spec: ast.expr) -> Optional[ast.Lambda]:
+    if isinstance(spec, ast.Call) and len(spec.args) >= 2:
+        im = spec.args[1]
+        if isinstance(im, ast.Lambda):
+            return im
+    return None
+
+
+def _lambda_arity(lam: ast.Lambda) -> int:
+    a = lam.args
+    return len(a.args) + len(a.posonlyargs)
+
+
+def _kernel_positional_count(
+    kernel_expr: ast.expr, tree: ast.Module
+) -> Optional[Tuple[str, int]]:
+    """(kernel_name, positional_param_count) with partial kwargs removed."""
+    bound_kw: List[str] = []
+    expr = kernel_expr
+    if isinstance(expr, ast.Call):
+        leaf = _dotted_leaf(expr.func)
+        if leaf == "partial" and expr.args:
+            bound_kw = [kw.arg for kw in expr.keywords if kw.arg]
+            expr = expr.args[0]
+        else:
+            return None
+    name = _dotted_leaf(expr)
+    if name is None:
+        return None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node.name == name:
+            a = node.args
+            positional = [p.arg for p in a.posonlyargs + a.args]
+            positional = [p for p in positional if p not in bound_kw]
+            n_kw_defaults = 0
+            # trailing positional params with defaults not bound by the
+            # partial are still consumed positionally by pallas; but
+            # params that are keyword-ONLY never are
+            return name, len(positional) - n_kw_defaults
+    return None
+
+
+def _grid_len(grid_expr: Optional[ast.expr], fn: ast.AST,
+              line: int) -> Optional[int]:
+    if grid_expr is None:
+        return None
+    if isinstance(grid_expr, ast.Name):
+        grid_expr = _resolve_name_assign(fn, grid_expr.id, line)
+        if grid_expr is None:
+            return None
+    if isinstance(grid_expr, (ast.Tuple, ast.List)):
+        return len(grid_expr.elts)
+    return None
+
+
+def _scratch_bytes(node: ast.expr, env: _Env) -> Optional[int]:
+    """pltpu.VMEM((shape...), jnp.float32) -> bytes (None = unresolved)."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _dotted_leaf(node.func) not in ("VMEM", "SMEM"):
+        return None
+    if not node.args:
+        return None
+    shape = node.args[0]
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        return None
+    total = 1
+    for dim in shape.elts:
+        v = env.resolve(dim)
+        if v is None:
+            return None
+        total *= max(v, 1)
+    itemsize = _DEFAULT_ITEMSIZE
+    if len(node.args) >= 2:
+        dt = _dotted_leaf(node.args[1])
+        if dt in _ITEMSIZE:
+            itemsize = _ITEMSIZE[dt]
+    return total * itemsize
+
+
+def _enclosing_fn(tree: ast.Module, line: int) -> Optional[ast.AST]:
+    best = None
+    best_span = None
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            lo, hi = node.lineno, node.end_lineno or node.lineno
+            if lo <= line <= hi:
+                span = hi - lo
+                if best_span is None or span < best_span:
+                    best, best_span = node, span
+    return best
+
+
+def _has_runtime_check(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            leaf = _dotted_leaf(node.func)
+            if leaf in _RUNTIME_CHECKS:
+                return True
+    return False
+
+
+def check(src: SourceFile) -> List[Diagnostic]:
+    module_bounds = _module_bounds(src.tree)
+    diags: List[Diagnostic] = []
+
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted_leaf(node.func) != "pallas_call":
+            continue
+        call = node
+        fn = _enclosing_fn(src.tree, call.lineno)
+        if fn is None:
+            continue
+
+        # ---- collect specs: direct kwargs or a PrefetchScalarGridSpec
+        grid_expr = _kw(call, "grid")
+        in_specs = _kw(call, "in_specs")
+        out_specs = _kw(call, "out_specs")
+        scratch = _kw(call, "scratch_shapes")
+        n_prefetch = 0
+        gs = _kw(call, "grid_spec")
+        if gs is not None:
+            if isinstance(gs, ast.Name):
+                gs = _resolve_name_assign(fn, gs.id, call.lineno)
+            if isinstance(gs, ast.Call):
+                grid_expr = _kw(gs, "grid") or grid_expr
+                in_specs = _kw(gs, "in_specs") or in_specs
+                out_specs = _kw(gs, "out_specs") or out_specs
+                scratch = _kw(gs, "scratch_shapes") or scratch
+                if _dotted_leaf(gs.func) == "PrefetchScalarGridSpec":
+                    np_expr = _kw(gs, "num_scalar_prefetch")
+                    if isinstance(np_expr, ast.Constant) and isinstance(
+                        np_expr.value, int
+                    ):
+                        n_prefetch = np_expr.value
+                    else:
+                        n_prefetch = 1
+            else:
+                continue  # unresolvable grid_spec: nothing to check
+
+        in_list = _spec_list(in_specs) or []
+        out_list = _spec_list(out_specs) or []
+        scratch_list = _spec_list(scratch) or []
+
+        # ---- arity: grid vs index_map
+        n_grid = _grid_len(grid_expr, fn, call.lineno)
+        if n_grid is not None:
+            want = n_grid + n_prefetch
+            for spec in in_list + out_list:
+                im = _index_map(spec)
+                if im is None:
+                    continue
+                got = _lambda_arity(im)
+                if got != want:
+                    diags.append(
+                        Diagnostic(
+                            PASS_ID, src.path, im.lineno,
+                            f"index_map takes {got} args but grid has "
+                            f"{n_grid} axes"
+                            + (f" + {n_prefetch} scalar-prefetch operand(s)"
+                               if n_prefetch else ""),
+                        )
+                    )
+
+        # ---- arity: kernel signature vs operand count
+        if call.args:
+            resolved = _kernel_positional_count(call.args[0], src.tree)
+            if resolved is not None and (in_list or out_list):
+                kname, n_params = resolved
+                want = n_prefetch + len(in_list) + len(out_list) + len(scratch_list)
+                if n_params != want:
+                    diags.append(
+                        Diagnostic(
+                            PASS_ID, src.path, call.lineno,
+                            f"kernel `{kname}` takes {n_params} positional "
+                            f"refs but pallas_call passes {want} "
+                            f"({n_prefetch} prefetch + {len(in_list)} in + "
+                            f"{len(out_list)} out + {len(scratch_list)} "
+                            f"scratch)",
+                        )
+                    )
+
+        # ---- VMEM budget
+        if not in_list and not out_list:
+            continue
+        env = _function_env(fn, module_bounds, call.lineno)
+        total = 0
+        unresolved: List[str] = []
+        for spec in in_list + out_list:
+            dims = _block_dims(spec)
+            if dims is None:
+                continue  # non-BlockSpec entry (e.g. pl.ANY)
+            block = 1
+            for dim in dims:
+                v = env.resolve(dim)
+                if v is None:
+                    try:
+                        unresolved.append(ast.unparse(dim))
+                    except Exception:
+                        unresolved.append("<dim>")
+                else:
+                    block *= max(v, 1)
+            total += block * _DEFAULT_ITEMSIZE
+        for s in scratch_list:
+            b = _scratch_bytes(s, env)
+            if b is not None:
+                total += b
+
+        if unresolved:
+            if not _has_runtime_check(fn):
+                uniq = sorted(set(unresolved))
+                diags.append(
+                    Diagnostic(
+                        PASS_ID, src.path, call.lineno,
+                        f"cannot bound block dim(s) {', '.join(uniq)} for "
+                        f"the VMEM estimate — add them to "
+                        f"VMEM_ANALYSIS_BOUNDS or gate the call on a "
+                        f"runtime budget check",
+                    )
+                )
+            continue
+        if total > DEFAULT_VMEM_LIMIT and not _has_runtime_check(fn):
+            diags.append(
+                Diagnostic(
+                    PASS_ID, src.path, call.lineno,
+                    f"static VMEM estimate {total} B exceeds the "
+                    f"{DEFAULT_VMEM_LIMIT} B budget "
+                    f"({total / 2**20:.1f} MiB > "
+                    f"{DEFAULT_VMEM_LIMIT // 2**20} MiB) — shrink block "
+                    f"shapes or add a runtime budget check",
+                )
+            )
+    return diags

@@ -1,0 +1,275 @@
+"""jit-purity: host side effects inside traced (jit/scan/pallas) code.
+
+Anything reachable from a ``jax.jit`` / ``jax.lax.scan`` /
+``pl.pallas_call`` body runs at TRACE time, once — not per step.  A
+``print`` there silently stops printing after the first call; ``time.*``
+measures tracing, not compute; ``.item()`` / ``float()`` / ``np.asarray``
+on a tracer either crashes or forces a device sync; mutating captured
+module state from traced code is nondeterminism; ``threading`` inside a
+trace is never what anyone meant.
+
+Roots are found syntactically, all within one module:
+
+* ``jax.jit(fn, ...)`` / ``jit(fn)`` — first positional arg by name, or
+  an inline ``lambda``;
+* ``functools.partial(jax.jit, ...)`` used as a decorator;
+* ``@jax.jit`` / ``@jit`` decorators;
+* ``jax.lax.scan(body, ...)`` / ``lax.scan(body, ...)``;
+* ``pl.pallas_call(kernel, ...)`` — including ``functools.partial(kernel,
+  ...)`` as the first argument.
+
+From those roots the pass closes over the intra-module call graph (bare
+``name(...)`` calls and ``self.method(...)`` calls) and checks every
+reachable function body for:
+
+* calls to ``print`` / ``input`` / ``breakpoint`` / ``open``;
+* calls through the ``time`` or ``threading`` modules;
+* ``.item()`` / ``.tolist()`` / ``.block_until_ready()`` method calls;
+* ``float(x)`` / ``int(x)`` / ``np.asarray(x)`` / ``np.array(x)`` where
+  ``x`` is a *parameter* of the enclosing reachable function (i.e. very
+  likely a tracer — literals and locals derived from shapes are fine);
+* assignment to attributes (``obj.x = ...`` — mutation of captured
+  Python state);
+* subscript stores or mutator-method calls (``.append``/``.extend``/
+  ``.add``/``.update``/``.pop``) on MODULE-LEVEL globals only.  Pallas
+  kernels assign through refs (``o_ref[...] = ...``, ``acc_ref[...] +=``)
+  and ``@pl.when`` nested functions store to enclosing-scope refs — both
+  are the intended idiom, so closure/parameter names are never flagged
+  for subscript stores.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import Diagnostic, SourceFile
+
+PASS_ID = "jit-purity"
+
+__all__ = ["PASS_ID", "check"]
+
+_BANNED_BUILTIN_CALLS = {"print", "input", "breakpoint", "open"}
+_BANNED_MODULES = {"time", "threading"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_MUTATOR_METHODS = {"append", "extend", "add", "update", "pop", "insert",
+                    "remove", "clear", "setdefault"}
+_CAST_CALLS = {"float", "int"}
+
+
+def _dotted(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _is_trace_entry(func: ast.expr) -> bool:
+    """Is this call expression a tracing entry point (jit/scan/pallas)?"""
+    d = _dotted(func)
+    if d is None:
+        return False
+    leaf = d.rsplit(".", 1)[-1]
+    return leaf in ("jit", "scan", "pallas_call")
+
+
+def _first_arg_func_names(call: ast.Call) -> List[ast.AST]:
+    """Resolve the traced-callable argument(s) of a tracing call: names
+    (for graph closure) and inline lambdas/defs (checked directly)."""
+    if not call.args:
+        return []
+    arg = call.args[0]
+    # functools.partial(kernel, ...) -> unwrap to the kernel
+    if isinstance(arg, ast.Call):
+        d = _dotted(arg.func)
+        if d is not None and d.rsplit(".", 1)[-1] == "partial" and arg.args:
+            arg = arg.args[0]
+    if isinstance(arg, (ast.Name, ast.Attribute, ast.Lambda)):
+        return [arg]
+    return []
+
+
+class _Module:
+    """Per-module function table + intra-module call graph."""
+
+    def __init__(self, tree: ast.Module):
+        # name -> list of defs (methods across classes may share a name;
+        # a syntactic pass treats that as may-alias and checks them all)
+        self.defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, []).append(node)
+
+    def callees(self, fn: ast.AST) -> Set[str]:
+        """Names of intra-module functions called from ``fn``'s own body
+        (nested defs are separate nodes, but walking them is harmless —
+        if the outer is traced, its nested defs are too)."""
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in self.defs:
+                    out.add(f.id)
+                elif (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self"
+                    and f.attr in self.defs
+                ):
+                    out.add(f.attr)
+        return out
+
+
+def _collect_roots(tree: ast.Module, mod: _Module) -> List[ast.AST]:
+    roots: List[ast.AST] = []
+    names: Set[str] = set()
+
+    def add(node: ast.AST) -> None:
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            d = _dotted(node)
+            if d is not None:
+                names.add(d.rsplit(".", 1)[-1])
+        elif isinstance(node, ast.Lambda):
+            roots.append(node)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_trace_entry(node.func):
+            for target in _first_arg_func_names(node):
+                add(target)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d: Optional[str] = None
+                if isinstance(dec, (ast.Name, ast.Attribute)):
+                    d = _dotted(dec)
+                elif isinstance(dec, ast.Call):
+                    # @functools.partial(jax.jit, static_argnames=...)
+                    inner = _dotted(dec.func)
+                    if inner is not None and inner.rsplit(".", 1)[-1] == "partial":
+                        if dec.args:
+                            d = _dotted(dec.args[0])
+                    else:
+                        d = inner
+                if d is not None and d.rsplit(".", 1)[-1] in ("jit", "pallas_call"):
+                    names.add(node.name)
+
+    # closure over the intra-module call graph
+    seen: Set[str] = set()
+    work = sorted(names)
+    while work:
+        name = work.pop()
+        if name in seen or name not in mod.defs:
+            continue
+        seen.add(name)
+        for fn in mod.defs[name]:
+            roots.append(fn)
+            for callee in mod.callees(fn):
+                if callee not in seen:
+                    work.append(callee)
+    return roots
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    elif isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+    else:
+        return set()
+    names = {p.arg for p in a.args + a.posonlyargs + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    names.discard("self")
+    return names
+
+
+def _module_globals(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+    return out
+
+
+def _check_body(
+    src: SourceFile, fn: ast.AST, globals_: Set[str]
+) -> List[Diagnostic]:
+    diags: List[Diagnostic] = []
+    params = _param_names(fn)
+
+    def flag(node: ast.AST, msg: str) -> None:
+        diags.append(Diagnostic(PASS_ID, src.path, node.lineno, msg))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            d = _dotted(f)
+            if isinstance(f, ast.Name):
+                if f.id in _BANNED_BUILTIN_CALLS:
+                    flag(node, f"`{f.id}()` inside traced code runs at "
+                               f"trace time, not per step")
+                elif f.id in _CAST_CALLS and node.args:
+                    a0 = node.args[0]
+                    if isinstance(a0, ast.Name) and a0.id in params:
+                        flag(node, f"`{f.id}({a0.id})` on a traced argument "
+                                   f"forces a host sync / trace-time crash")
+            elif isinstance(f, ast.Attribute):
+                root = d.split(".", 1)[0] if d else None
+                if root in _BANNED_MODULES:
+                    flag(node, f"`{d}()` inside traced code measures/acts at "
+                               f"trace time — move it outside the jit")
+                elif f.attr in _SYNC_METHODS:
+                    flag(node, f"`.{f.attr}()` inside traced code forces a "
+                               f"host sync (or fails on a tracer)")
+                elif d in ("np.asarray", "np.array", "numpy.asarray",
+                           "numpy.array") and node.args:
+                    a0 = node.args[0]
+                    if isinstance(a0, ast.Name) and a0.id in params:
+                        flag(node, f"`{d}({a0.id})` materializes a traced "
+                                   f"argument on the host")
+                elif f.attr in _MUTATOR_METHODS:
+                    base = f.value
+                    if isinstance(base, ast.Name) and base.id in globals_:
+                        flag(node, f"mutation of module-level `{base.id}` "
+                                   f"(.{f.attr}) from traced code")
+        elif isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    flag(t, f"assignment to `{_dotted(t) or t.attr}` mutates "
+                            f"captured Python state from traced code")
+                elif isinstance(t, ast.Subscript):
+                    base = t.value
+                    if isinstance(base, ast.Name) and base.id in globals_:
+                        flag(t, f"subscript store into module-level "
+                                f"`{base.id}` from traced code")
+    return diags
+
+
+def check(src: SourceFile) -> List[Diagnostic]:
+    mod = _Module(src.tree)
+    roots = _collect_roots(src.tree, mod)
+    globals_ = _module_globals(src.tree)
+    diags: List[Diagnostic] = []
+    seen_fns = set()
+    for fn in roots:
+        if id(fn) in seen_fns:
+            continue
+        seen_fns.add(id(fn))
+        diags.extend(_check_body(src, fn, globals_))
+    # dedupe: nested defs can be reached both as roots and via walk
+    seen = set()
+    out = []
+    for d in sorted(diags, key=lambda d: (d.line, d.message)):
+        k = (d.line, d.message)
+        if k not in seen:
+            seen.add(k)
+            out.append(d)
+    return out

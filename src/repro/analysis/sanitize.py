@@ -1,0 +1,272 @@
+"""Runtime lock sanitizer: the dynamic cross-check of lock-discipline.
+
+Enabled with ``REPRO_SANITIZE=1``.  :func:`install` parses the same
+``# guarded by: <lockname>`` annotations the static pass reads — straight
+from ``inspect.getsource(cls)`` via the shared parser in
+:mod:`repro.analysis.locks` — and replaces each guarded attribute with a
+data descriptor.  Every get/set of a guarded attribute on an *armed*
+instance asserts the owning lock is held by the current thread.
+
+Design points that make this usable under the real cluster tests:
+
+* **Record, don't raise.**  A raise inside a replica thread would be
+  swallowed by the failover machinery (the replica is simply marked dead
+  and the test still passes).  Violations are appended to a module-level
+  list; ``check()`` raises with the full set, and the test suite calls
+  it from an autouse fixture after every test.
+* **Arming is explicit and per-instance.**  Construction is
+  single-threaded and intentionally lock-free (``__init__`` is exempt in
+  the static pass too); the cluster arms replicas when their threads
+  start and disarms on ``close()``, so post-join teardown reads are
+  clean by construction.
+* **Lock identity by name, ownership by thread.**  The named lock
+  attribute is looked up on the same instance and auto-wrapped in
+  :class:`OwnedLock` (owner = thread ident, cleared *before* the inner
+  release so a racing acquirer can never be misattributed).  A plain
+  unwrapped lock degrades to ``locked()`` — weaker, but never a false
+  positive for the holding thread.
+
+Scope: instance attributes of the serving cluster classes.  Module-level
+guarded globals (the dispatch counters) are covered statically only.
+"""
+
+from __future__ import annotations
+
+import inspect
+import os
+import threading
+import traceback
+from typing import List, Optional, Type
+
+from repro.analysis.locks import parse_guards
+
+__all__ = [
+    "OwnedLock",
+    "enabled",
+    "install",
+    "uninstall",
+    "maybe_install",
+    "arm",
+    "disarm",
+    "violations",
+    "reset",
+    "check",
+]
+
+_VIOLATIONS: List[str] = []
+_VIOLATIONS_LOCK = threading.Lock()
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+class OwnedLock:
+    """A lock wrapper that knows which thread holds it.
+
+    Supports the subset of the ``threading.Lock`` API this repo uses
+    (``with``, ``acquire``/``release``, ``locked``) plus
+    :meth:`held_by_me`.
+    """
+
+    __slots__ = ("_inner", "_owner")
+
+    def __init__(self, inner=None):
+        self._inner = inner if inner is not None else threading.Lock()
+        self._owner: Optional[int] = None
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._owner = threading.get_ident()
+        return got
+
+    def release(self) -> None:
+        # clear BEFORE releasing: after release another thread may acquire
+        # and set itself as owner; a late clear would erase that
+        self._owner = None
+        self._inner.release()
+
+    def __enter__(self) -> "OwnedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def held_by_me(self) -> bool:
+        return self._owner == threading.get_ident()
+
+
+def _caller() -> str:
+    """file:line of the innermost frame outside this module."""
+    here = __file__
+    for frame in reversed(traceback.extract_stack()):
+        if frame.filename != here:
+            return f"{frame.filename}:{frame.lineno}"
+    return "<unknown>"
+
+
+def _record(msg: str) -> None:
+    with _VIOLATIONS_LOCK:
+        _VIOLATIONS.append(msg)
+
+
+def violations() -> List[str]:
+    with _VIOLATIONS_LOCK:
+        return list(_VIOLATIONS)
+
+
+def reset() -> None:
+    with _VIOLATIONS_LOCK:
+        _VIOLATIONS.clear()
+
+
+def check() -> None:
+    """Raise if any guarded access happened without its lock."""
+    found = violations()
+    if found:
+        reset()
+        detail = "\n  ".join(found[:20])
+        more = f"\n  ... and {len(found) - 20} more" if len(found) > 20 else ""
+        raise AssertionError(
+            f"sanitizer recorded {len(found)} unguarded accesses:\n"
+            f"  {detail}{more}"
+        )
+
+
+def _lock_held(inst, lockname: str) -> Optional[bool]:
+    lock = inst.__dict__.get(lockname)
+    if lock is None:
+        lock = getattr(inst, lockname, None)
+    if lock is None:
+        return None  # lock not constructed yet (mid-__init__)
+    if isinstance(lock, OwnedLock):
+        return lock.held_by_me()
+    locked = getattr(lock, "locked", None)
+    if callable(locked):
+        return bool(locked())  # plain lock: can't attribute ownership
+    return None
+
+
+class _GuardedAttr:
+    """Data descriptor asserting the owning lock at get/set time."""
+
+    def __init__(self, name: str, lockname: str):
+        self.name = name
+        self.lockname = lockname
+        self.slot = f"_guarded__{name}"
+
+    def _verify(self, inst, op: str) -> None:
+        if not inst.__dict__.get("_sanitize_armed"):
+            return
+        held = _lock_held(inst, self.lockname)
+        if held is False:
+            _record(
+                f"{type(inst).__name__}.{self.name} {op} without "
+                f"`{self.lockname}` held "
+                f"[thread {threading.current_thread().name}] at {_caller()}"
+            )
+
+    def __get__(self, inst, owner=None):
+        if inst is None:
+            return self
+        try:
+            value = inst.__dict__[self.slot]
+        except KeyError:
+            raise AttributeError(self.name) from None
+        self._verify(inst, "read")
+        return value
+
+    def __set__(self, inst, value) -> None:
+        self._verify(inst, "write")
+        inst.__dict__[self.slot] = value
+
+    def __delete__(self, inst) -> None:
+        self._verify(inst, "delete")
+        inst.__dict__.pop(self.slot, None)
+
+
+class _LockAttr:
+    """Descriptor that wraps assigned locks in :class:`OwnedLock`."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.slot = f"_lockattr__{name}"
+
+    def __get__(self, inst, owner=None):
+        if inst is None:
+            return self
+        try:
+            return inst.__dict__[self.slot]
+        except KeyError:
+            raise AttributeError(self.name) from None
+
+    def __set__(self, inst, value) -> None:
+        if value is not None and not isinstance(value, OwnedLock):
+            value = OwnedLock(value)
+        inst.__dict__[self.slot] = value
+
+
+def arm(inst) -> None:
+    """Start asserting on this instance's guarded attributes."""
+    inst.__dict__["_sanitize_armed"] = True
+
+
+def disarm(inst) -> None:
+    inst.__dict__["_sanitize_armed"] = False
+
+
+def install(cls: Type) -> int:
+    """Wrap ``cls``'s annotated attributes in sanitizing descriptors.
+
+    Returns the number of attributes wrapped.  Idempotent.
+    """
+    if cls.__dict__.get("_sanitize_installed"):
+        return 0
+    try:
+        source = inspect.getsource(cls)
+    except (OSError, TypeError):
+        return 0
+    attr_guards, _ = parse_guards(source.splitlines())
+    if not attr_guards:
+        return 0
+    saved = {}
+    for attr, lockname in attr_guards.items():
+        saved[attr] = cls.__dict__.get(attr)
+        setattr(cls, attr, _GuardedAttr(attr, lockname))
+    for lockname in sorted(set(attr_guards.values())):
+        if lockname not in attr_guards:  # a lock is never its own data
+            saved.setdefault(lockname, cls.__dict__.get(lockname))
+            setattr(cls, lockname, _LockAttr(lockname))
+    cls._sanitize_installed = True
+    cls._sanitize_saved = saved
+    return len(attr_guards)
+
+
+def uninstall(cls: Type) -> None:
+    if not cls.__dict__.get("_sanitize_installed"):
+        return
+    saved = cls.__dict__.get("_sanitize_saved", {})
+    for attr, prev in saved.items():
+        if prev is None:
+            try:
+                delattr(cls, attr)
+            except AttributeError:
+                pass
+        else:
+            setattr(cls, attr, prev)
+    cls._sanitize_installed = False
+    cls._sanitize_saved = {}
+
+
+def maybe_install(*classes: Type) -> None:
+    """Install on each class iff ``REPRO_SANITIZE=1``.  Called at the
+    bottom of ``serving/cluster.py`` so plain runs pay zero overhead."""
+    if not enabled():
+        return
+    for cls in classes:
+        install(cls)

@@ -42,6 +42,12 @@ __all__ = [
 
 NEG_INF = -1e30
 
+# Declared worst-case block dims for the static VMEM gate
+# (repro.analysis pallas-contract).  G = query heads per KV head, hd/vd =
+# head dims, page = KV page size.  Growing a model config past these must
+# come back here — the budget math below is checked against them in CI.
+VMEM_ANALYSIS_BOUNDS = {"G": 16, "hd": 256, "vd": 256, "page": 128}
+
 
 def decode_attention_kernel(
     q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, n_s: int

@@ -23,6 +23,11 @@ __all__ = ["flash_attention_kernel", "flash_attention_pallas"]
 
 NEG_INF = -1e30
 
+# Declared worst-case head dims for the static VMEM gate
+# (repro.analysis pallas-contract); block sizes bq/bkv resolve from their
+# keyword defaults.  Raising a model past these must revisit the tiling.
+VMEM_ANALYSIS_BOUNDS = {"hd": 256, "vd": 256}
+
 
 def flash_attention_kernel(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float, causal: bool, n_kv: int, bq: int, bkv: int

@@ -26,6 +26,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["ssd_scan_kernel", "ssd_scan_pallas"]
 
+# Declared worst-case dims for the static VMEM gate (repro.analysis
+# pallas-contract): nh = SSD heads, hd = head dim, s = state dim.  The
+# chunk length resolves from its keyword default; these are the knobs a
+# bigger model would turn, so growing them must re-run the budget math.
+VMEM_ANALYSIS_BOUNDS = {"nh": 32, "hd": 128, "s": 128}
+
 
 def ssd_scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, state_out_ref, state_ref):
     ci = pl.program_id(1)

@@ -180,7 +180,7 @@ def use_dispatch(config: Optional[DispatchConfig] = None, **kw):
 # --------------------------------------------------------------------------- #
 # hit counters (trace-time): (op, path, shape-signature) -> count
 # --------------------------------------------------------------------------- #
-_COUNTS: Counter = Counter()
+_COUNTS: Counter = Counter()  # guarded by: _COUNTS_LOCK
 _COUNTS_LOCK = threading.Lock()
 
 

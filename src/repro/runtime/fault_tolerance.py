@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -201,10 +202,17 @@ class FaultInjector:
     hang_replica: Optional[Tuple[int, int]] = None
     hang_s: float = 0.5
     slow_replica: Optional[Tuple[int, int, int]] = None
-    fired: Dict[str, int] = dataclasses.field(default_factory=dict)
+    fired: Dict[str, int] = dataclasses.field(default_factory=dict)  # guarded by: _fired_lock
+    _fired_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def _hit(self, kind: str) -> None:
-        self.fired[kind] = self.fired.get(kind, 0) + 1
+        # one injector is shared across all replica threads: the bare
+        # read-modify-write this replaces was a lost-update race under
+        # concurrent kill/slow faults (caught by the lock-discipline pass)
+        with self._fired_lock:
+            self.fired[kind] = self.fired.get(kind, 0) + 1
 
     def deny_reserve(self, step_idx: int) -> bool:
         """True when page reservations must fail at engine step ``step_idx``."""

@@ -59,6 +59,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import sanitize as _sanitize
 from repro.runtime.fault_tolerance import FaultInjector, StepWatchdog
 from repro.serving.engine import Engine, Request
 from repro.serving.scheduler import FailoverBudget, RejectedOverload, RoutingPolicy
@@ -118,17 +119,23 @@ class _Replica:
         self.id = rid
         self.eng = eng
         self.thread: Optional[threading.Thread] = None
-        self.inbox: List[Request] = []
         self.inbox_lock = threading.Lock()
-        self.state = "healthy"  # "healthy" | "dead" | "probation"
-        self.state_cmd = "run"  # "run" | "drain" (what the thread should do)
-        self.drained = False
-        self.error: Optional[BaseException] = None
-        self.last_beat = time.monotonic()
-        self.step_count = 0  # local step counter (injector clock)
-        self.straggler_seen = 0  # straggler_flags already examined
-        self.deaths = 0
-        self.rejoin_t = 0.0
+        self.health_lock = threading.Lock()
+        self.inbox: List[Request] = []  # guarded by: inbox_lock
+        # Health fields cross the replica-thread/monitor boundary in both
+        # directions; everything below health_lock's annotations is
+        # single-writer and confined to one side of that boundary.
+        self.state_cmd = "run"  # guarded by: health_lock
+        self.drained = False  # guarded by: health_lock
+        self.step_error: Optional[BaseException] = None  # guarded by: health_lock
+        self.last_beat = time.monotonic()  # guarded by: health_lock
+        # monitor-thread-confined ("healthy" | "dead" | "probation"):
+        # only check_health/_mark_dead/restart_replica transition it
+        self.state = "healthy"
+        self.step_count = 0  # replica-thread-confined (injector clock)
+        self.straggler_seen = 0  # monitor-confined: flags already examined
+        self.deaths = 0  # monitor-confined
+        self.rejoin_t = 0.0  # monitor-confined
 
     @property
     def thread_alive(self) -> bool:
@@ -195,24 +202,27 @@ class Cluster:
         self._poll_s = poll_s
 
         self._lock = threading.Lock()
-        self._uid = 0
-        self._tracked: List[_Tracked] = []
-        self._by_seg: Dict[int, _Tracked] = {}  # id(segment) -> record
-        self._pending: List[_Tracked] = []  # awaiting routing (FIFO + retry_at)
-        self._finished: List[Request] = []  # roots, finish order
+        self._uid = 0  # guarded by: _lock
+        self._tracked: List[_Tracked] = []  # guarded by: _lock
+        self._by_seg: Dict[int, _Tracked] = {}  # guarded by: _lock
+        self._pending: List[_Tracked] = []  # guarded by: _lock
+        self._finished: List[Request] = []  # guarded by: _lock
+        # one-way lock-free flags: set once by the controlling thread,
+        # polled by replica threads (a stale read costs one extra loop)
         self._shutdown = False
         self._draining = False
 
-        # cluster-level accounting (benchmarks/serving.py --trace failover)
-        self.failovers = 0  # segments re-enqueued after a replica death
-        self.failovers_prefix_match = 0  # resumed segments that matched pages
-        self.heartbeat_misses = 0
-        self.replica_deaths = 0
-        self.rejoins = 0
-        self.exhausted = 0  # roots rejected with reason="replica_lost"
+        # cluster-level accounting (benchmarks/serving.py --trace failover);
+        # read live via stats() — raw attribute reads need _lock
+        self.failovers = 0  # guarded by: _lock
+        self.failovers_prefix_match = 0  # guarded by: _lock
+        self.heartbeat_misses = 0  # guarded by: _lock
+        self.replica_deaths = 0  # guarded by: _lock
+        self.rejoins = 0  # guarded by: _lock
+        self.exhausted = 0  # guarded by: _lock
         # uid -> emitted-lengths at each failover, in order: the resume
         # split points a verifier needs to replay each continuation
-        self.resume_points: Dict[int, List[int]] = {}
+        self.resume_points: Dict[int, List[int]] = {}  # guarded by: _lock
 
         self.replicas = [
             _Replica(rid, self._prepare(self._factory(rid), rid))
@@ -237,6 +247,12 @@ class Cluster:
 
     def start(self) -> None:
         """Spawn any replica thread not already running."""
+        if _sanitize.enabled():
+            # arm only while threads run: construction and post-join
+            # teardown are single-threaded and intentionally lock-free
+            _sanitize.arm(self)
+            for rep in self.replicas:
+                _sanitize.arm(rep)
         for rep in self.replicas:
             if not rep.thread_alive:
                 rep.thread = threading.Thread(
@@ -250,6 +266,10 @@ class Cluster:
         for rep in self.replicas:
             if rep.thread is not None:
                 rep.thread.join(timeout=5.0)
+        if _sanitize.enabled():
+            _sanitize.disarm(self)
+            for rep in self.replicas:
+                _sanitize.disarm(rep)
 
     # ------------------------------------------------------------------ #
     # submission / segments
@@ -299,8 +319,11 @@ class Cluster:
     def _replica_loop(self, rep: _Replica) -> None:
         eng = rep.eng
         while not self._shutdown:
-            if rep.state_cmd == "drain":
-                if not rep.drained:
+            with rep.health_lock:
+                cmd = rep.state_cmd
+                drained = rep.drained
+            if cmd == "drain":
+                if not drained:
                     with rep.inbox_lock:
                         rep.inbox = []
                     try:
@@ -309,11 +332,14 @@ class Cluster:
                         eng.take_queue()
                         eng.export_inflight()
                     except Exception as e:  # engine too broken to drain
-                        rep.error = rep.error or e
-                    rep.drained = True
+                        with rep.health_lock:
+                            rep.step_error = rep.step_error or e
+                    with rep.health_lock:
+                        rep.drained = True
                     self._log("replica_drained", replica=rep.id,
                               pages_used=eng.pages_in_use if eng.paged else 0)
-                rep.last_beat = time.monotonic()
+                with rep.health_lock:
+                    rep.last_beat = time.monotonic()
                 time.sleep(self._poll_s)
                 continue
 
@@ -330,20 +356,25 @@ class Cluster:
                     rep.step_count += 1
                     if self.injector is not None:
                         self.injector.on_replica_step(rep.id, rep.step_count)
-                    if rep.state_cmd == "drain":
+                    with rep.health_lock:
+                        cmd = rep.state_cmd
+                    if cmd == "drain":
                         # a hang fault parked us long enough for the
                         # monitor to declare us dead — do NOT step a
                         # replica whose work already failed over
                         continue
                     finished = eng.step()
                 except Exception as e:
-                    rep.error = e
+                    with rep.health_lock:
+                        rep.step_error = e
                     return  # thread dies; the monitor declares us dead
-                rep.last_beat = time.monotonic()
+                with rep.health_lock:
+                    rep.last_beat = time.monotonic()
                 for req in finished:
                     self._on_done(rep, req)
             else:
-                rep.last_beat = time.monotonic()
+                with rep.health_lock:
+                    rep.last_beat = time.monotonic()
                 time.sleep(self._poll_s)
 
     def _on_done(self, rep: _Replica, req: Request) -> None:
@@ -432,14 +463,18 @@ class Cluster:
                     return
                 tr = self._pending.pop(idx)
                 seg = self._make_segment(tr)
-                loads = [
-                    (
+                loads = []
+                for r in healthy:
+                    # the replica thread swaps its inbox concurrently; an
+                    # unlocked len() here raced that swap (flagged by the
+                    # lock-discipline pass, pinned in test_cluster)
+                    with r.inbox_lock:
+                        depth = len(r.inbox)
+                    loads.append((
                         r.id,
-                        len(r.inbox) + r.eng.n_waiting,
+                        depth + r.eng.n_waiting,
                         r.eng.pages_in_use if r.eng.paged else r.eng.n_active,
-                    )
-                    for r in healthy
-                ]
+                    ))
                 rid = self.routing.pick(loads)
                 tr.cur = seg
                 tr.replica = rid
@@ -464,12 +499,18 @@ class Cluster:
         directly by tests driving the cluster manually."""
         now = time.monotonic()
         for rep in self.replicas:
+            # snapshot the thread-shared health fields once, then decide
+            with rep.health_lock:
+                err = rep.step_error
+                beat = rep.last_beat
+                drained = rep.drained
             if rep.state == "healthy":
                 reason = None
-                if rep.error is not None:
-                    reason = f"step-error:{type(rep.error).__name__}"
-                elif now - rep.last_beat > self._deadline_s(rep):
-                    self.heartbeat_misses += 1
+                if err is not None:
+                    reason = f"step-error:{type(err).__name__}"
+                elif now - beat > self._deadline_s(rep):
+                    with self._lock:
+                        self.heartbeat_misses += 1
                     reason = "heartbeat-miss"
                 else:
                     flags = rep.eng.straggler_flags
@@ -483,8 +524,8 @@ class Cluster:
                 if reason is not None:
                     self._mark_dead(rep, reason)
             elif rep.state == "dead":
-                if rep.thread_alive and rep.drained and rep.error is None and (
-                    now - rep.last_beat <= self._deadline_s(rep)
+                if rep.thread_alive and drained and err is None and (
+                    now - beat <= self._deadline_s(rep)
                 ):
                     rep.state = "probation"
                     rep.rejoin_t = now + self.probation_s
@@ -492,23 +533,26 @@ class Cluster:
             elif rep.state == "probation":
                 if now >= rep.rejoin_t:
                     rep.state = "healthy"
-                    rep.state_cmd = "run"
                     rep.straggler_seen = rep.eng.straggler_flags
-                    rep.last_beat = now
-                    self.rejoins += 1
+                    with rep.health_lock:
+                        rep.state_cmd = "run"
+                        rep.last_beat = now
+                    with self._lock:
+                        self.rejoins += 1
                     self._log("replica_rejoin", replica=rep.id)
         if not any(r.state != "dead" for r in self.replicas):
             self._shed_all("replica_lost")
 
     def _mark_dead(self, rep: _Replica, reason: str) -> None:
         rep.state = "dead"
-        rep.state_cmd = "drain"
-        rep.drained = False
+        with rep.health_lock:
+            rep.state_cmd = "drain"
+            rep.drained = False
         rep.deaths += 1
-        self.replica_deaths += 1
         self._log("replica_dead", replica=rep.id, reason=reason)
         now = time.monotonic()
         with self._lock:
+            self.replica_deaths += 1
             victims = [
                 (key, tr) for key, tr in self._by_seg.items()
                 if tr.replica == rep.id
@@ -593,13 +637,14 @@ class Cluster:
         if rep.thread_alive:
             raise RuntimeError(f"replica {rid} thread is still alive")
         rep.eng = self._prepare(self._factory(rid), rid)
-        rep.error = None
         rep.step_count = 0
         rep.straggler_seen = 0
         rep.state = "dead"
-        rep.state_cmd = "drain"
-        rep.drained = True  # fresh engine holds nothing to drain
-        rep.last_beat = time.monotonic()
+        with rep.health_lock:
+            rep.step_error = None
+            rep.state_cmd = "drain"
+            rep.drained = True  # fresh engine holds nothing to drain
+            rep.last_beat = time.monotonic()
         with rep.inbox_lock:
             rep.inbox = []
         rep.thread = threading.Thread(
@@ -615,6 +660,23 @@ class Cluster:
     def n_open(self) -> int:
         with self._lock:
             return sum(1 for tr in self._tracked if not tr.done)
+
+    def stats(self) -> Dict[str, object]:
+        """Locked snapshot of the failover accounting — the safe way to
+        read the counters while replica threads are live (raw attribute
+        reads are flagged by the lock-discipline pass / sanitizer)."""
+        with self._lock:
+            return {
+                "failovers": self.failovers,
+                "failovers_prefix_match": self.failovers_prefix_match,
+                "heartbeat_misses": self.heartbeat_misses,
+                "replica_deaths": self.replica_deaths,
+                "rejoins": self.rejoins,
+                "exhausted": self.exhausted,
+                "resume_points": {
+                    uid: list(pts) for uid, pts in self.resume_points.items()
+                },
+            }
 
     def run(
         self,
@@ -682,3 +744,9 @@ class Cluster:
                     ),
                     t_done=pc,
                 )
+
+
+# Under REPRO_SANITIZE=1 the `# guarded by:` annotations above become
+# runtime descriptors asserting lock ownership on every access (no-op and
+# zero-overhead otherwise).
+_sanitize.maybe_install(Cluster, _Replica)

@@ -539,6 +539,10 @@ class Engine:
         # overload/robustness accounting
         self.preemptions = 0  # slots preempted for higher-priority waiters
         self.quarantined = 0  # requests errored out on non-finite logits
+        # shared lock-free: the cluster monitor polls this from another
+        # thread (check_health straggler detection); single-writer (the
+        # engine thread), monotonically increasing, so a stale read only
+        # delays detection by one monitor pass — never corrupts it
         self.straggler_flags = 0  # watchdog-flagged slow steps
         self.exported = 0  # in-flight requests evicted via export_inflight
         self._step_idx = 0  # engine step() invocations (injector clock)
@@ -734,6 +738,14 @@ class Engine:
         self.scheduler.enqueue(request)
         return request
 
+    # n_active / n_waiting / pages_in_use are polled lock-free by the
+    # cluster's routing pass from the monitor thread while the engine
+    # thread mutates the underlying scheduler state.  That is deliberate:
+    # they are single-writer load ESTIMATES — a stale value can only
+    # misroute one admission to a slightly busier replica, and taking the
+    # engine's step-loop hot path through a lock to sharpen a heuristic
+    # would invert the cost/benefit.  Correctness-bearing cluster state is
+    # what the `# guarded by:` annotations in serving/cluster.py cover.
     @property
     def n_active(self) -> int:
         return self.scheduler.allocator.n_active

@@ -181,6 +181,12 @@ class PageAllocator:
         self.n_pages = n_pages
         self.cache_budget = cache_budget
         self.on_evict = on_evict
+        # THREAD CONFINEMENT: every field below is owned by the engine
+        # thread that drives step()/admit(); nothing here is read across
+        # threads (the cluster monitor only polls derived counts via
+        # Engine properties, documented there).  If allocator state ever
+        # crosses a thread boundary, add a lock and `# guarded by:`
+        # annotations so the lock-discipline pass + sanitizer cover it.
         self._free = list(range(n_pages - 1, -1, -1))  # stack, lowest id on top
         self._ref = [0] * n_pages
         self._peak = 0
@@ -499,6 +505,8 @@ class PrefixIndex:
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self.page_size = page_size
+        # engine-thread-confined, like PageAllocator: lookups and inserts
+        # happen only from admission/release paths on the owning engine
         self._by_key: dict = {}
         self._by_page: dict = {}
         # chain linkage (parent key -> child keys) for subtree drops:
@@ -767,6 +775,10 @@ class Scheduler:
         self.release_grant = release_grant
         self.policy = policy
         self.pressure = pressure
+        # engine-thread-confined (admission state mutated only from the
+        # owning engine's step loop).  `len(queue)` is additionally polled
+        # lock-free by the cluster router via Engine.n_waiting — a
+        # single-reader load estimate, see the note on that property.
         self.slot_pages: dict = {}
         self.queue: Deque = collections.deque()
         self.shed: List = []

@@ -23,6 +23,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.analysis import sanitize
 from repro.configs.registry import ARCH_IDS, get_arch
 from repro.data.synthetic import modality_extras
 from repro.models.model import build_model
@@ -44,6 +45,17 @@ ENG_KW = dict(
     n_slots=2, max_len=MAX_LEN, page_size=4, prefill_chunk=4,
     decode_block=2, share_prefix=True,
 )
+
+
+@pytest.fixture(autouse=True)
+def _sanitizer_clean():
+    """Under REPRO_SANITIZE=1 every guarded-attribute access in these
+    tests is checked live; a violation recorded by ANY thread during the
+    test fails it here (raising inside a replica thread would just look
+    like one more replica death to the failover machinery)."""
+    sanitize.reset()
+    yield
+    sanitize.check()
 
 
 # --------------------------------------------------------------------------- #
@@ -163,11 +175,12 @@ def _reference(trace, cfg, model, params, seed=0):
 def _check_streams(clu, reqs, refs, trace, cfg, replay_eng, seed=0):
     """The per-compute-path token contract (see module docstring)."""
     n_failed_over = 0
+    resume_points = clu.stats()["resume_points"]  # locked snapshot
     for i, r in enumerate(reqs):
         assert r.status == "ok", f"req {i}: {r.status} ({r.rejected})"
         got = list(r.tokens)
         assert len(got) == trace[i]["max_new"]
-        splits = clu.resume_points.get(r.uid)
+        splits = resume_points.get(r.uid)
         if not splits:
             assert got == refs[i], f"unfailed req {i} diverged from replay"
             continue
@@ -229,12 +242,16 @@ def test_cluster_kill_failover_and_restart(llama):
         clu.run(reqs, timeout_s=120.0)
 
         assert inj.fired.get("kill_replica") == 1
-        assert isinstance(clu.replicas[0].error, ReplicaKilled)
-        assert clu.replicas[0].state == "dead"
-        assert not clu.replicas[0].thread_alive  # the thread genuinely died
-        assert clu.replica_deaths >= 1
-        assert clu.failovers >= 1
-        assert clu.exhausted == 0
+        rep0 = clu.replicas[0]
+        with rep0.health_lock:
+            step_error = rep0.step_error
+        assert isinstance(step_error, ReplicaKilled)
+        assert rep0.state == "dead"
+        assert not rep0.thread_alive  # the thread genuinely died
+        stats = clu.stats()
+        assert stats["replica_deaths"] >= 1
+        assert stats["failovers"] >= 1
+        assert stats["exhausted"] == 0
         n_failed = _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
         assert n_failed >= 1  # the kill landed on live work
 
@@ -245,7 +262,7 @@ def test_cluster_kill_failover_and_restart(llama):
         clu.restart_replica(0)
         assert clu.replicas[0].thread_alive
         _drive_to_healthy(clu, 0)
-        assert clu.rejoins >= 1
+        assert clu.stats()["rejoins"] >= 1
 
         # the restarted fleet serves again
         more = _build(_trace(cfg, 2, seed=9), cfg, seed=50)
@@ -277,17 +294,18 @@ def test_cluster_hang_heartbeat_miss_failover(llama):
 
         assert inj.fired.get("hang_replica") == 1
         # no exception was raised: ONLY the silent heartbeat caught this
-        assert clu.heartbeat_misses >= 1
-        assert clu.replica_deaths >= 1
-        assert clu.failovers >= 1
-        assert clu.exhausted == 0
+        stats = clu.stats()
+        assert stats["heartbeat_misses"] >= 1
+        assert stats["replica_deaths"] >= 1
+        assert stats["failovers"] >= 1
+        assert stats["exhausted"] == 0
         n_failed = _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
         assert n_failed >= 1
         # the hung thread survived; once the hang ends it drains and can
         # walk probation back to healthy
         assert clu.replicas[0].thread_alive
         _drive_to_healthy(clu, 0)
-        assert clu.rejoins >= 1
+        assert clu.stats()["rejoins"] >= 1
     finally:
         clu.close()
 
@@ -327,9 +345,10 @@ def test_cluster_slow_replica_straggler_death(llama):
 
         assert eng_inj.fired.get("slow_step", 0) >= 1
         assert clu.replicas[0].eng.straggler_flags >= 1
-        assert clu.heartbeat_misses == 0  # straggler path, not heartbeat
-        assert clu.replica_deaths >= 1
-        assert clu.exhausted == 0
+        stats = clu.stats()
+        assert stats["heartbeat_misses"] == 0  # straggler path, not heartbeat
+        assert stats["replica_deaths"] >= 1
+        assert stats["exhausted"] == 0
         _check_streams(clu, reqs, refs, trace, cfg, replay_eng)
     finally:
         clu.close()
@@ -351,8 +370,9 @@ def test_cluster_budget_exhaustion_structured_rejection(llama):
         reqs = _build(trace, cfg, seed=0)
         clu.run(reqs, timeout_s=120.0)
         assert inj.fired.get("kill_replica") == 1
-        assert clu.exhausted >= 1
-        assert clu.failovers == 0  # zero budget: no re-enqueue happened
+        stats = clu.stats()
+        assert stats["exhausted"] >= 1
+        assert stats["failovers"] == 0  # zero budget: no re-enqueue happened
         for r in reqs:
             # nothing vanishes: every root lands terminal with a reason
             assert r.status == "shed"
@@ -378,11 +398,13 @@ def test_cluster_probation_rejoin_state_machine(llama):
         deadline = time.monotonic() + 5.0
         while rep.state == "healthy" and time.monotonic() < deadline:
             # simulate a wedged device: the beat stops
-            rep.last_beat = time.monotonic() - 1.0
+            with rep.health_lock:
+                rep.last_beat = time.monotonic() - 1.0
             clu.check_health()
         assert rep.state == "dead"
-        assert clu.heartbeat_misses >= 1
-        assert rep.state_cmd == "drain"
+        assert clu.stats()["heartbeat_misses"] >= 1
+        with rep.health_lock:
+            assert rep.state_cmd == "drain"
 
         # the thread drains (nothing held) and beats while parked ->
         # probation; a clean probation window -> healthy again
@@ -391,12 +413,14 @@ def test_cluster_probation_rejoin_state_machine(llama):
             clu.check_health()
             time.sleep(0.01)
         assert rep.state == "probation"
-        assert rep.drained
+        with rep.health_lock:
+            assert rep.drained
         t_probation = time.monotonic()
         _drive_to_healthy(clu, 0)
         assert time.monotonic() - t_probation >= clu.probation_s * 0.5
-        assert clu.rejoins == 1
-        assert rep.state_cmd == "run"
+        assert clu.stats()["rejoins"] == 1
+        with rep.health_lock:
+            assert rep.state_cmd == "run"
     finally:
         clu.close()
 
